@@ -1,0 +1,29 @@
+"""Paper Table-1-motivated workload: batched rows x large-vocab softmax
+(the LM-head shape).  Vocab sizes follow the assigned architectures."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.softmax_api import SoftmaxAlgorithm, softmax
+
+VOCABS = [32000, 49152, 65536, 102400, 152064]
+
+
+def run(rows_per_batch=64):
+    out = []
+    for v in VOCABS:
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (rows_per_batch, v)) * 6
+        for algo in SoftmaxAlgorithm:
+            sec = time_fn(
+                jax.jit(lambda t, a=algo: softmax(t, algorithm=a)), x)
+            tokps = rows_per_batch / sec
+            out.append((f"batched_rows/{algo.value}/vocab={v}",
+                        round(sec * 1e6, 2), f"{tokps:.0f}rows/s"))
+    return emit(out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Benchmark utilities: timing, CSV output, size grids.
+
+Timing protocol mirrors the paper's (SS6.2): warm up, run repeatedly for a
+minimum wall time, report the median over repetitions.  On this container the
+implementations under test are the XLA-compiled jnp forms (the Pallas kernels
+target TPU; interpret mode is not a performance artifact), so the CPU numbers
+play the role of the paper's AVX numbers: same algorithms, same pass
+structure, different vector ISA.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, min_time_s: float = 0.2, reps: int = 7) -> float:
+    """Median seconds/call over ``reps`` measurements (paper protocol)."""
+    fn(*args)                                     # compile + warm
+    jax.block_until_ready(fn(*args))
+    medians = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        calls = 0
+        while time.perf_counter() - t0 < min_time_s / reps:
+            jax.block_until_ready(fn(*args))
+            calls += 1
+        medians.append((time.perf_counter() - t0) / max(calls, 1))
+    return float(np.median(medians))
+
+
+def emit(rows: list[tuple], header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows
+
+
+# Array sizes (f32 elements): spanning L1/L2/L3/DRAM like the paper's sweep.
+SIZES = [2 ** k for k in range(10, 24, 2)]        # 1K .. 8M elements
+OUT_OF_CACHE = 8 * 2 ** 20                        # 8M f32 = 32 MB

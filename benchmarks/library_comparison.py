@@ -1,0 +1,29 @@
+"""Paper Fig 10 analogue: our three algorithms vs the platform library
+softmax (the paper compared against Intel DNNL; here the installed-library
+baseline is ``jax.nn.softmax``)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import SIZES, emit, time_fn
+from repro.core.softmax_api import SoftmaxAlgorithm, softmax
+
+
+def run(sizes=None):
+    rows = []
+    for n in sizes or SIZES[3:]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, n)) * 8
+        lib = time_fn(jax.jit(lambda t: jax.nn.softmax(t, -1)), x)
+        rows.append((f"library_comparison/jax.nn.softmax/n={n}",
+                     round(lib * 1e6, 2), "1.00x"))
+        for algo in SoftmaxAlgorithm:
+            sec = time_fn(
+                jax.jit(lambda t, a=algo: softmax(t, algorithm=a)), x)
+            rows.append((f"library_comparison/{algo.value}/n={n}",
+                         round(sec * 1e6, 2), f"{lib / sec:.2f}x"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

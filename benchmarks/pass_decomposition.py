@@ -1,0 +1,83 @@
+"""Paper Fig 7 analogue: absolute runtime of each individual pass.
+
+Each pass is jit'd separately on an out-of-cache array so its memory
+behavior is isolated, exactly like the paper's per-pass breakdown:
+  Alg1: max | sumexp | recompute+scale
+  Alg2: max | exp-store(+sum) | inplace-scale
+  Alg3: extexp-(m,n)-reduce | extexp-scale
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import OUT_OF_CACHE, emit, time_fn
+from repro.core import numerics
+
+
+def _passes():
+    def p_max(x):
+        return jnp.max(x, -1)
+
+    def p_sumexp(x, mu):
+        return jnp.sum(jnp.exp(x - mu[:, None]), -1)
+
+    def p_recompute_scale(x, mu, lam):
+        return jnp.exp(x - mu[:, None]) * lam[:, None]
+
+    def p_exp_store(x, mu):
+        y = jnp.exp(x - mu[:, None])
+        return y, jnp.sum(y, -1)
+
+    def p_inplace_scale(y, lam):
+        return y * lam[:, None]
+
+    def p_mn_reduce(x):
+        m, n = numerics.ext_exp(x)
+        n_max = jnp.max(n, -1, keepdims=True)
+        return jnp.sum(m * numerics.exp2_int(n - n_max), -1), n_max[:, 0]
+
+    def p_mn_scale(x, m_sum, n_sum):
+        m, n = numerics.ext_exp(x)
+        return m * (1.0 / m_sum[:, None]) * numerics.exp2_int(
+            n - n_sum[:, None])
+
+    return {
+        "alg1_pass1_max": (p_max, "x"),
+        "alg1_pass2_sumexp": (p_sumexp, "x,mu"),
+        "alg1_pass3_recompute_scale": (p_recompute_scale, "x,mu,lam"),
+        "alg2_pass2_exp_store": (p_exp_store, "x,mu"),
+        "alg2_pass3_inplace_scale": (p_inplace_scale, "y,lam"),
+        "alg3_pass1_mn_reduce": (p_mn_reduce, "x"),
+        "alg3_pass2_mn_scale": (p_mn_scale, "x,m,n"),
+    }
+
+
+def run(n=OUT_OF_CACHE):
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n)) * 8
+    mu = jnp.max(x, -1)
+    lam = 1.0 / jnp.sum(jnp.exp(x - mu[:, None]), -1)
+    y = jnp.exp(x - mu[:, None])
+    m, nn = None, None
+    rows = []
+    passes = _passes()
+    args_map = {
+        "x": (x,), "x,mu": (x, mu), "x,mu,lam": (x, mu, lam),
+        "y,lam": (y, lam),
+    }
+    # (m, n) stats for pass-2 timing
+    from repro.core.twopass import twopass_softmax_stats
+
+    st = twopass_softmax_stats(x)
+    args_map["x,m,n"] = (x, st.mantissa[:, 0], st.exponent[:, 0])
+    for name, (fn, sig) in passes.items():
+        sec = time_fn(jax.jit(fn), *args_map[sig])
+        rows.append((f"pass_decomposition/{name}",
+                     round(sec * 1e6, 2),
+                     f"{n * 4 / sec / 1e9:.2f}GB/s(1-pass-equiv)"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,115 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from the
+dry-run artifacts in experiments/dryrun/.
+
+  compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective term = collective_bytes / (chips x 50e9 B/s ICI/link)
+
+Under SPMD, ``cost_analysis`` reports PER-DEVICE flops/bytes (verified:
+an 8-way-sharded matmul reports 1/8 of total), i.e. already the
+"/ chips" form of the assignment's formula — so terms divide by the
+per-chip peak only.  The collective-bytes HLO parse is also per-device
+(one device's program).  HLO_FLOPs / bytes / collective_bytes use the
+scan-corrected L-extrapolation (launch/lowering.extrapolate_cost).
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the assignment,
+a GLOBAL quantity; the useful-compute ratio is therefore
+MODEL_FLOPS / (HLO_FLOPs * chips).
+
+Emits a markdown table (EXPERIMENTS.md SSRoofline) + CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+def model_flops(arch: str, cell_name: str) -> float:
+    """6ND for train (fwd+bwd), 2ND for inference-forward per token."""
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        if cfg.family == "encdec":
+            tokens = cell.global_batch * (cell.seq_len + cfg.dec_len)
+        else:
+            tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def analyze_cell(path: pathlib.Path) -> dict | None:
+    data = json.loads(path.read_text())
+    if data.get("skipped"):
+        return {"arch": data["arch"], "cell": data["cell"], "skipped": True,
+                "reason": data.get("reason", "")}
+    mesh = data["mesh"]
+    chips = 1
+    for v in mesh.values():
+        chips *= v
+    src = data.get("extrapolated") or data["scanned"]
+    flops = float(src["flops"])          # per-device (see module docstring)
+    bytes_ = float(src["bytes"])
+    coll = float(src["collective_bytes"])
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])
+    mf = model_flops(data["arch"], data["cell"])
+    return {
+        "arch": data["arch"], "cell": data["cell"], "skipped": False,
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant[0], "t_dominant_s": dominant[1],
+        "model_flops": mf, "hlo_flops_per_dev": flops,
+        "useful_ratio": mf / (flops * chips) if flops else 0.0,
+        "roofline_fraction": (mf / (chips * PEAK_FLOPS)) / dominant[1]
+        if dominant[1] else 0.0,
+        "extrapolated": "extrapolated" in data,
+        "memory_per_dev_gb": (data["memory"]["argument_bytes"]
+                              + data["memory"]["temp_bytes"]) / 2 ** 30,
+    }
+
+
+def run(dryrun_dir="experiments/dryrun", mesh_tag="pod16x16",
+        markdown=True):
+    rows = []
+    for p in sorted(pathlib.Path(dryrun_dir).glob(f"*__{mesh_tag}.json")):
+        r = analyze_cell(p)
+        if r:
+            rows.append(r)
+    if markdown:
+        print("| arch | cell | compute s | memory s | collective s | "
+              "dominant | 6ND/HLO | roofline frac | mem GB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r.get("skipped"):
+                print(f"| {r['arch']} | {r['cell']} | — | — | — | "
+                      f"SKIP: {r['reason'][:60]} | — | — | — |")
+                continue
+            print(f"| {r['arch']} | {r['cell']} "
+                  f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+                  f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+                  f"| {r['useful_ratio']:.2f} "
+                  f"| {r['roofline_fraction']:.2%} "
+                  f"| {r['memory_per_dev_gb']:.1f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(mesh_tag=sys.argv[1] if len(sys.argv) > 1 else "pod16x16")

@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure (+ beyond-paper
+tables).  Prints ``name,us_per_call,derived`` CSV rows.
+
+  softmax_sweep       — Fig 5/6: three algorithms across array sizes
+  pass_decomposition  — Fig 7: per-pass absolute runtimes
+  memory_traffic      — Table 2: 4N/5N/3N verified on compiled artifacts
+  library_comparison  — Fig 10: vs platform library softmax (jax.nn)
+  batched_rows        — Table 1 workload: LM-head vocab-sized rows
+  fused_xent          — beyond-paper: fused two-pass CE vs unfused
+  attention_stream    — beyond-paper: (m,n)-streamed attention memory/time
+
+Weak-scaling (Fig 8/9) is not reproducible on this 1-core container and is
+covered by the multi-chip roofline analysis instead (EXPERIMENTS.md SSRoofline).
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma list of bench names to run")
+    p.add_argument("--fast", action="store_true",
+                   help="smaller grids (CI mode)")
+    args = p.parse_args()
+
+    from benchmarks import (attention_stream, batched_rows, fused_xent,
+                            library_comparison, memory_traffic,
+                            pass_decomposition, softmax_sweep)
+
+    benches = {
+        "softmax_sweep": lambda: softmax_sweep.run(
+            sizes=[2 ** 14, 2 ** 20] if args.fast else None),
+        "pass_decomposition": lambda: pass_decomposition.run(
+            n=2 ** 20 if args.fast else 8 * 2 ** 20),
+        "memory_traffic": memory_traffic.run,
+        "library_comparison": lambda: library_comparison.run(
+            sizes=[2 ** 20] if args.fast else None),
+        "batched_rows": lambda: batched_rows.run(
+            rows_per_batch=8 if args.fast else 64),
+        "fused_xent": lambda: fused_xent.run(
+            t=32 if args.fast else 256,
+            vocabs=(49152,) if args.fast else (49152, 152064)),
+        "attention_stream": lambda: attention_stream.run(
+            seqs=(1024,) if args.fast else (1024, 4096, 8192)),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", file=sys.stderr)
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Fig 5/6 analogue: the three softmax algorithms across array sizes.
+
+Reports ns/element and derived effective bandwidth (using each algorithm's
+*theoretical* traffic: 4N/5N/3N x 4 bytes — Table 2), so the bandwidth
+column collapses to the same curve iff the implementations are
+memory-bound, which is the paper's central claim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SIZES, emit, time_fn
+from repro.core.softmax_api import SoftmaxAlgorithm, softmax
+
+TRAFFIC = {
+    SoftmaxAlgorithm.THREE_PASS_RECOMPUTE: 4,
+    SoftmaxAlgorithm.THREE_PASS_RELOAD: 5,
+    SoftmaxAlgorithm.TWO_PASS: 3,
+}
+
+
+def run(sizes=None):
+    rows = []
+    for n in sizes or SIZES:
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, n)) * 8
+        for algo in SoftmaxAlgorithm:
+            fn = jax.jit(lambda t, a=algo: softmax(t, algorithm=a))
+            sec = time_fn(fn, x)
+            gbps = TRAFFIC[algo] * n * 4 / sec / 1e9
+            rows.append((f"softmax_sweep/{algo.value}/n={n}",
+                         round(sec * 1e6, 2), f"{gbps:.2f}GB/s"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,16 @@
+"""Regenerate EXPERIMENTS.md tables from artifacts (run after sweeps)."""
+import io, re, sys, contextlib
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks import roofline
+
+buf = io.StringIO()
+with contextlib.redirect_stdout(buf):
+    roofline.run()
+table = buf.getvalue()
+
+md = open("EXPERIMENTS.md").read()
+md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## §Perf|\Z)",
+            "<!-- ROOFLINE_TABLE -->\n\n" + table + "\n",
+            md, flags=re.S)
+open("EXPERIMENTS.md", "w").write(md)
+print("EXPERIMENTS.md roofline table updated")

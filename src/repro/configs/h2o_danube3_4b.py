@@ -1,0 +1,13 @@
+"""h2o-danube-3-4b [dense]: 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+vocab=32000 — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; unverified].  head_dim = 3840/32 = 120 (unusual, kept
+faithful; MXU pads to 128 internally)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10240, vocab=32000,
+    swa_window=4096,
+)

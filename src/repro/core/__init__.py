@@ -1,0 +1,19 @@
+"""Core: the paper's contribution — Two-Pass softmax via extended exponents."""
+
+from repro.core.numerics import (  # noqa: F401
+    ExtFloat,
+    ext_add,
+    ext_exp,
+    ext_exp_reconstruct,
+    ext_log,
+    ext_sum,
+    ext_zero,
+    exp_via_extexp,
+)
+from repro.core.softmax_api import SoftmaxAlgorithm, logsumexp, softmax  # noqa: F401
+from repro.core.twopass import (  # noqa: F401
+    twopass_logsumexp,
+    twopass_logsumexp_sharded,
+    twopass_softmax,
+    twopass_softmax_sharded,
+)

@@ -1,0 +1,214 @@
+"""Core numerics for the Two-Pass Softmax algorithm (Dukhan & Ablavatski, 2020).
+
+This module implements the paper's central device: an *extended-exponent*
+representation for exponentials.  ``ExtExp(x)`` returns a pair of floats
+``(m, n)`` such that
+
+    e^x == m * 2^n,   m = e^t in [sqrt(2)/2, sqrt(2)],   n integral (as f32)
+
+i.e. the classic exp implementation (range reduction -> polynomial ->
+reconstruction) with the *reconstruction step removed* (paper SS4).  Keeping
+``n`` as a float extends the dynamic range far beyond what a single f32 (or
+even f64) can represent, which is what makes the Two-Pass softmax possible.
+
+Pairs form a commutative monoid under "scaled addition" (paper Alg 3 inner
+loop):
+
+    (m1, n1) + (m2, n2) -> (m1*2^(n1-n') + m2*2^(n2-n'), n'),  n' = max(n1, n2)
+
+The scale factors are exact powers of two with non-positive exponents, so the
+combine can neither overflow nor lose accuracy to the scaling itself.  The
+monoid is associative (up to FP rounding of the adds), which is what lets us
+distribute the reduction over Pallas grid tiles, lanes, and mesh axes alike.
+
+Everything here is pure ``jax.numpy`` and dtype-polymorphic over f32/bf16
+inputs (accumulation is always f32, matching the paper's single-precision
+evaluation).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Polynomial / range-reduction constants (paper Alg 4, XNNPACK rr2-p5).
+#
+# Cody-Waite: ln(2) is split into a high part with trailing zeros in the
+# mantissa and a low correction so that ``x - n*ln2_hi`` is exact for all
+# relevant |n|.  Coefficients of the degree-5 minimax polynomial for e^t on
+# [-ln2/2, ln2/2] are the XNNPACK avx2-rr2-p5 set (Sollya-generated, <2 ULP).
+# ---------------------------------------------------------------------------
+LOG2E = float.fromhex("0x1.715476p+0")        # log2(e)
+LN2_HI = float.fromhex("0x1.62E430p-1")       # ln(2) high (Cody-Waite)
+LN2_LO = float.fromhex("-0x1.05C610p-29")     # ln(2) low  (Cody-Waite)
+EXP_C5 = float.fromhex("0x1.0F9F9Cp-7")       # ~1/120
+EXP_C4 = float.fromhex("0x1.573A1Ap-5")       # ~1/24
+EXP_C3 = float.fromhex("0x1.555A80p-3")       # ~1/6
+EXP_C2 = float.fromhex("0x1.FFFDC6p-2")       # ~1/2
+EXP_C1 = float.fromhex("0x1.FFFFF6p-1")       # ~1
+
+# n_sum identity element: -inf would poison ``2^(n - n_max)`` paths through
+# 0*inf -> NaN in some fused forms, so the canonical *finite* identity uses a
+# very negative exponent with zero mantissa: 0 * 2^MIN_EXP == 0 exactly, and
+# MIN_EXP is small enough that any real element dominates the max.
+MINUS_INF_N = -1.0e38
+PLUS_INF_N = 1.0e38
+
+# Finite-input clamp: for x > ~2.36e38, n = x*log2e itself overflows f32.
+# Logits anywhere near this are degenerate; clamping preserves monotonicity
+# up to the clamp and guarantees totally NaN-free evaluation.
+_X_CLAMP = 1.0e37
+
+# Cody-Waite reduction degrades once |n*ln2_hi| cancellation exceeds the f32
+# mantissa; beyond that the reduced argument t can leave [-ln2/2, ln2/2] by
+# orders of magnitude and the polynomial overflows.  We clamp t to the reduced
+# range (slightly widened): for |x| within the practical logit domain the
+# clamp never engages; for adversarially huge |x| the exponent n still tracks
+# x exactly, so softmax ordering/saturation behave correctly and no NaN/inf
+# can ever be produced.  (Deviation from the paper, which assumes bounded
+# inputs; documented in DESIGN.md.)
+_T_CLAMP = 0.35
+
+
+class ExtFloat(NamedTuple):
+    """A number represented as ``mantissa * 2**exponent`` (both f32 arrays).
+
+    ``exponent`` is integral-valued but carried as float so its range is not
+    limited by any integer format (paper SS4).
+    """
+
+    mantissa: jax.Array
+    exponent: jax.Array
+
+
+def ext_exp(x: jax.Array) -> ExtFloat:
+    """``ExtExp``: e^x as an (m, n) pair, reconstruction step omitted.
+
+    Follows paper Alg 4 minus the final ``p * 2^n``:
+      n = round(x * log2e)                       (round-to-nearest-even)
+      t = x - n*ln2_hi - n*ln2_lo                (Cody-Waite reduction)
+      m = 1 + t(c1 + t(c2 + t(c3 + t(c4 + t c5))))   (Horner, FMA-friendly)
+
+    Never overflows/underflows.  +/-inf inputs map to exact monoid elements
+    (masking support: ``-inf -> (0, MINUS_INF_N)`` contributes nothing to a
+    softmax row).
+    """
+    x = x.astype(jnp.float32)
+    xc = jnp.clip(x, -_X_CLAMP, _X_CLAMP)    # keep n = x*log2e finite
+    n = jnp.round(xc * LOG2E)                # round-to-nearest-even, as float
+    t = xc - n * LN2_HI
+    t = t - n * LN2_LO
+    t = jnp.clip(t, -_T_CLAMP, _T_CLAMP)     # Cody-Waite breakdown guard
+    p = EXP_C5
+    p = p * t + EXP_C4
+    p = p * t + EXP_C3
+    p = p * t + EXP_C2
+    p = p * t + EXP_C1
+    m = p * t + 1.0
+    # Infinity guards: keep exponents finite so downstream 2^(n-n_max) math
+    # stays NaN-free (0*2^0 paths).  jnp.clip(NaN) would poison t for x=+-inf.
+    neg_inf = x == -jnp.inf
+    pos_inf = x == jnp.inf
+    m = jnp.where(neg_inf, 0.0, jnp.where(pos_inf, 1.0, m))
+    n = jnp.where(neg_inf, MINUS_INF_N, jnp.where(pos_inf, PLUS_INF_N, n))
+    return ExtFloat(m, n)
+
+
+def exp2_int(n: jax.Array) -> jax.Array:
+    """Exact ``2^n`` for integral-valued float ``n`` via exponent-field bits.
+
+    This is the paper's AVX2 reconstruction trick (SS6.3): build the scale
+    ``s = 2^n`` by writing ``n + 127`` into the exponent field of an f32.
+    ``n <= -127`` flushes to zero (paper's FTZ assumption); ``n`` is clamped
+    to 127 above.  Crucially this is *exact* — ``jnp.exp2`` lowers to
+    ``exp(n*ln2)`` on some backends and carries ~1 ULP error, which would
+    break the "power-of-two scaling is error-free" property the (m, n)
+    algebra relies on.
+    """
+    n = jnp.clip(n, -127.0, 127.0)
+    biased = (n + 127.0).astype(jnp.int32) << 23
+    return jax.lax.bitcast_convert_type(biased, jnp.float32)
+
+
+def ext_exp_reconstruct(e: ExtFloat) -> jax.Array:
+    """Reconstruction step ``m * 2^n`` (overflows/underflows like plain exp).
+
+    This is the step the Two-Pass algorithm deliberately *avoids* for
+    intermediates; it is exposed for testing and for the three-pass baselines.
+    """
+    return e.mantissa * jnp.exp2(e.exponent)
+
+
+def exp_via_extexp(x: jax.Array) -> jax.Array:
+    """Reference exp built from ExtExp + reconstruction (paper Alg 4)."""
+    return ext_exp_reconstruct(ext_exp(x))
+
+
+def ext_zero(shape=(), dtype=jnp.float32) -> ExtFloat:
+    """Identity element of the (m, n) addition monoid."""
+    return ExtFloat(
+        jnp.zeros(shape, dtype), jnp.full(shape, MINUS_INF_N, dtype)
+    )
+
+
+def ext_add(a: ExtFloat, b: ExtFloat) -> ExtFloat:
+    """Paper Alg 3 inner-loop combine: overflow-free scaled addition.
+
+    ``n' = max(na, nb);  m' = ma*2^(na-n') + mb*2^(nb-n')``.
+    Exponent deltas are <= 0, so the 2^k factors are <= 1: no overflow, and
+    scaling by a power of two is exact.  Deltas below ~-126 flush the scaled
+    mantissa to zero -- the same FTZ assumption the paper makes.
+    """
+    n_max = jnp.maximum(a.exponent, b.exponent)
+    m = a.mantissa * exp2_int(a.exponent - n_max) + b.mantissa * exp2_int(
+        b.exponent - n_max
+    )
+    return ExtFloat(m, n_max)
+
+
+def ext_scale_add(acc: ExtFloat, elt: ExtFloat) -> ExtFloat:
+    """Alias of :func:`ext_add` with (accumulator, element) argument order."""
+    return ext_add(acc, elt)
+
+
+def ext_sum(e: ExtFloat, axis=-1, keepdims: bool = False) -> ExtFloat:
+    """Vectorized monoid reduction along ``axis``.
+
+    Equivalent to folding :func:`ext_add` over the axis but evaluated as
+    max+rescale+sum, which is how a SIMD/VMEM-tile implementation performs the
+    in-register part of pass 1.  ``jnp.max`` over an empty axis is guarded by
+    the caller; identity handled via MINUS_INF_N exponents.
+    """
+    n_max = jnp.max(e.exponent, axis=axis, keepdims=True)
+    # Guard fully-empty/-identity rows: keep n_max at MINUS_INF_N, scale = 2^0.
+    scale = exp2_int(e.exponent - n_max)
+    m = jnp.sum(e.mantissa * scale, axis=axis, keepdims=True)
+    if not keepdims:
+        m = jnp.squeeze(m, axis=axis)
+        n_max = jnp.squeeze(n_max, axis=axis)
+    return ExtFloat(m, n_max)
+
+
+def ext_log(e: ExtFloat) -> jax.Array:
+    """Natural log of an ExtFloat: ``log(m) + n*ln2`` (f32, wide range).
+
+    The result magnitude is ~|n|*0.693 which fits f32 for all n produced by
+    f32 inputs.  Used by the fused logsumexp/cross-entropy path.
+    """
+    return jnp.log(e.mantissa) + e.exponent * jnp.float32(LN2_HI + LN2_LO)
+
+
+def ext_ratio_scale(num: ExtFloat, den: ExtFloat) -> jax.Array:
+    """Compute ``num/den`` reconstructed to a plain float: m ratio * 2^(dn).
+
+    Used in pass 2 of the Two-Pass softmax: ``y_i = m_i * (1/m_sum) *
+    2^(n_i - n_sum)``.  The exponent delta is <= 0 by construction when the
+    denominator is the monoid-sum over a set containing the numerator, so no
+    overflow is possible; deep underflow flushes to zero as in the paper.
+    """
+    return num.mantissa * (1.0 / den.mantissa) * exp2_int(
+        num.exponent - den.exponent
+    )

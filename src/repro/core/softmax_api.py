@@ -1,0 +1,87 @@
+"""Algorithm-selectable softmax: the framework-wide entry point.
+
+Every softmax site in the framework (attention, LM-head, MoE router, sampler)
+calls :func:`softmax` / :func:`logsumexp` so the paper's algorithms are
+swappable via config (``SoftmaxAlgorithm``).  The three algorithms match the
+paper exactly:
+
+  * ``THREE_PASS_RECOMPUTE``  -- paper Alg 1 (max, sum-of-exp, recompute+scale)
+  * ``THREE_PASS_RELOAD``     -- paper Alg 2 (max, exp+store, in-place scale)
+  * ``TWO_PASS``              -- paper Alg 3 (ExtExp (m,n) monoid)
+
+On CPU/XLA the "passes" of the jnp forms may fuse; the memory-pass semantics
+are realized literally by the Pallas kernels (``repro.kernels``), which this
+module dispatches to when ``use_kernel=True``.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import twopass
+
+
+class SoftmaxAlgorithm(str, enum.Enum):
+    THREE_PASS_RECOMPUTE = "three_pass_recompute"
+    THREE_PASS_RELOAD = "three_pass_reload"
+    TWO_PASS = "two_pass"
+
+
+def _threepass_recompute(x: jax.Array, axis: int) -> jax.Array:
+    """Paper Alg 1.  Pass 1: mu = max x.  Pass 2: sigma = sum e^(x-mu).
+    Pass 3: y = e^(x-mu) / sigma (exp recomputed)."""
+    mu = jnp.max(x, axis=axis, keepdims=True)                 # pass 1
+    sigma = jnp.sum(jnp.exp(x - mu), axis=axis, keepdims=True)  # pass 2
+    lam = 1.0 / sigma
+    return (jnp.exp(x - mu) * lam).astype(x.dtype)            # pass 3
+
+
+def _threepass_reload(x: jax.Array, axis: int) -> jax.Array:
+    """Paper Alg 2.  Stores e^(x-mu) then rescales it in place."""
+    mu = jnp.max(x, axis=axis, keepdims=True)                 # pass 1
+    y = jnp.exp(x - mu)                                       # pass 2 (store)
+    sigma = jnp.sum(y, axis=axis, keepdims=True)
+    return (y * (1.0 / sigma)).astype(x.dtype)                # pass 3 (reload)
+
+
+_ALGOS = {
+    SoftmaxAlgorithm.THREE_PASS_RECOMPUTE: _threepass_recompute,
+    SoftmaxAlgorithm.THREE_PASS_RELOAD: _threepass_reload,
+    SoftmaxAlgorithm.TWO_PASS: twopass.twopass_softmax,
+}
+
+
+def softmax(x: jax.Array, axis: int = -1,
+            algorithm: SoftmaxAlgorithm | str = SoftmaxAlgorithm.TWO_PASS,
+            use_kernel: bool = False) -> jax.Array:
+    """Softmax along ``axis`` with a selectable memory-pass algorithm.
+
+    ``use_kernel=True`` routes 2-D, last-axis cases through the Pallas TPU
+    kernels (interpret-mode on CPU); everything else uses the jnp forms.
+    """
+    algorithm = SoftmaxAlgorithm(algorithm)
+    if use_kernel and axis in (-1, x.ndim - 1):
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.softmax(x, algorithm=algorithm)
+    return _ALGOS[algorithm](x, axis=axis)
+
+
+def logsumexp(x: jax.Array, axis: int = -1, keepdims: bool = False,
+              algorithm: SoftmaxAlgorithm | str = SoftmaxAlgorithm.TWO_PASS,
+              ) -> jax.Array:
+    """logsumexp with the selected algorithm's pass structure."""
+    algorithm = SoftmaxAlgorithm(algorithm)
+    if algorithm == SoftmaxAlgorithm.TWO_PASS:
+        return twopass.twopass_logsumexp(x, axis=axis, keepdims=keepdims)
+    mu = jnp.max(x, axis=axis, keepdims=True)
+    s = jnp.sum(jnp.exp(x - mu), axis=axis, keepdims=True)
+    out = (jnp.log(s) + mu).astype(x.dtype)
+    if not keepdims:
+        out = jnp.squeeze(out, axis=axis)
+    return out

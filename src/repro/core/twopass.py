@@ -1,0 +1,122 @@
+"""Two-Pass softmax / logsumexp (paper Alg 3) in pure JAX, plus the
+mesh-distributed (m, n) combine used by vocab-parallel and sequence-parallel
+reductions.
+
+These are the *algorithmic* implementations: dtype-exact, jit-friendly,
+backend-agnostic.  The TPU Pallas kernels in ``repro.kernels`` implement the
+same math with explicit HBM->VMEM tiling and are verified against this module.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.numerics import ExtFloat, ext_exp, ext_log, ext_sum
+
+
+def twopass_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Softmax via the Two-Pass algorithm (paper Alg 3).
+
+    Pass 1: ExtExp every element and monoid-reduce to ``(m_sum, n_sum)``.
+    Pass 2: recompute ExtExp and scale: ``y = m * (1/m_sum) * 2^(n - n_sum)``.
+
+    In this jnp form XLA may fuse the passes; the memory-pass structure is
+    enforced for real in the Pallas kernel.  Numerically identical either way.
+    """
+    dtype = x.dtype
+    e = ext_exp(x)                                   # pass 1: read x
+    s = ext_sum(e, axis=axis, keepdims=True)
+    e2 = ext_exp(x)                                  # pass 2: read x, write y
+    y = numerics.ext_ratio_scale(e2, s)
+    return y.astype(dtype)
+
+
+def twopass_logsumexp(x: jax.Array, axis: int = -1,
+                      keepdims: bool = False) -> jax.Array:
+    """logsumexp computed in one data pass via the (m, n) representation.
+
+    ``lse = log(m_sum) + n_sum * ln2``.  This is the forward of the fused
+    cross-entropy (the paper's pass 1 *is* the lse reduction).
+    """
+    s = ext_sum(ext_exp(x), axis=axis, keepdims=keepdims)
+    return ext_log(s).astype(x.dtype)
+
+
+def twopass_softmax_stats(x: jax.Array, axis: int = -1) -> ExtFloat:
+    """Pass 1 only: the per-row ``(m_sum, n_sum)`` statistics (keepdims)."""
+    return ext_sum(ext_exp(x), axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Distributed combines (the paper's monoid promoted to mesh axes).
+# ---------------------------------------------------------------------------
+
+def ext_sum_sharded(x_local: jax.Array, axis_name: str,
+                    reduce_axis: int = -1) -> ExtFloat:
+    """Per-shard pass 1 + ONE collective to combine (m, n) across a mesh axis.
+
+    Inside ``shard_map``: each shard owns a slice of the softmax axis (e.g. a
+    vocabulary shard).  Three-pass would need an all-reduce(max) *then* an
+    all-reduce(sum) -- two latency-bound collectives.  The (m, n) monoid folds
+    both into a single ``all_gather`` of a 2-float-per-row payload followed by
+    an in-register reduction, halving collective count (DESIGN SS2.4).
+    """
+    local = ext_sum(ext_exp(x_local), axis=reduce_axis, keepdims=True)
+    # all_gather the (m, n) pairs: payload is tiny (2 floats/row/shard).
+    ms = jax.lax.all_gather(local.mantissa, axis_name, axis=0)   # [S, ...]
+    ns = jax.lax.all_gather(local.exponent, axis_name, axis=0)
+    gathered = ExtFloat(ms, ns)
+    return ext_sum(gathered, axis=0)
+
+
+def twopass_softmax_sharded(x_local: jax.Array, axis_name: str,
+                            reduce_axis: int = -1) -> jax.Array:
+    """Vocab/row-parallel softmax: exact global softmax of a sharded axis.
+
+    Must be called inside ``shard_map`` with ``reduce_axis`` sharded over
+    ``axis_name``.  Returns the local slice of the global softmax.
+    """
+    s = ext_sum_sharded(x_local, axis_name, reduce_axis)  # keepdims shapes
+    e = ext_exp(x_local)
+    y = (e.mantissa * (1.0 / s.mantissa)
+         * numerics.exp2_int(e.exponent - s.exponent))
+    return y.astype(x_local.dtype)
+
+
+def twopass_logsumexp_sharded(x_local: jax.Array, axis_name: str,
+                              reduce_axis: int = -1) -> jax.Array:
+    """Sharded logsumexp with a single fused collective (keepdims=True)."""
+    s = ext_sum_sharded(x_local, axis_name, reduce_axis)
+    return ext_log(s).astype(x_local.dtype)
+
+
+def ext_combine_partials(m: jax.Array, n: jax.Array, o: jax.Array,
+                         axis: int = 0) -> tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+    """Combine partial attention results carried as ``(o, m_sum, n_sum)``.
+
+    Flash-decoding-style: each partial attended over a disjoint KV chunk and
+    reports an *unnormalized* output accumulator ``o`` (already divided by its
+    local m_sum? no -- o is sum of 2^(n_i-n_sum_local) * m_i * v weighting, so
+    o_local * m_sum_local-normalization is deferred).  Convention here:
+
+        o_k     = sum_{i in chunk k} softmax-numerator_i * v_i / 2^{n_k}
+        (m_k, n_k) = chunk-local (m_sum, n_sum)
+
+    Global result = sum_k o_k * 2^{n_k - n*} / m*  with (m*, n*) the monoid
+    sum.  Scale factors are exact powers of two (paper's key trick).
+
+    Args are stacked along ``axis`` (the shard/chunk axis).  Returns
+    (m_star, n_star, o_star) with o_star STILL unnormalized by m_star.
+    """
+    n_star = jnp.max(n, axis=axis, keepdims=True)
+    scale = numerics.exp2_int(n - n_star)
+    m_star = jnp.sum(m * scale, axis=axis)
+    # o carries trailing feature dims beyond (m, n); broadcast scale up.
+    o_scale = scale.reshape(scale.shape + (1,) * (o.ndim - scale.ndim))
+    o_star = jnp.sum(o * o_scale, axis=axis)
+    return m_star, jnp.squeeze(n_star, axis=axis), o_star

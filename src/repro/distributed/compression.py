@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick, DESIGN SS5).
+
+On a multi-pod mesh the inter-pod links are the slow tier; compressing the
+gradient payload before the cross-pod reduce trades a little precision for
+ICI time.  Two schemes:
+
+  * bf16 cast (2x), stateless.
+  * int8 per-tensor affine quantization (4x) with error feedback: the
+    quantization residual is carried to the next step so the compression
+    bias vanishes in expectation (standard EF-SGD argument).
+
+Implemented as a grads-transform around the optimizer; with pjit the cast
+happens before XLA's reduce so the collective moves the small dtype.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict       # same structure as grads, f32
+
+
+def init_error_feedback(params) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_bf16(grads):
+    """Stateless bf16 gradient payload."""
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def compress_int8(grads, ef: EFState):
+    """Per-tensor symmetric int8 quantization with error feedback.
+
+    Returns ((qs, scales, treedef), new EFState) — flat lists to keep the
+    payload pytree simple for the collective layer.
+    """
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    res_flat = jax.tree_util.tree_flatten(ef.residual)[0]
+    qs, scales, residuals = [], [], []
+    for g, r in zip(flat, res_flat):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        qs.append(qi)
+        scales.append(scale)
+        residuals.append(gf - qi.astype(jnp.float32) * scale)
+    new_ef = EFState(jax.tree_util.tree_unflatten(treedef, residuals))
+    return (qs, scales, treedef), new_ef
+
+
+def decompress_int8(payload):
+    qs, scales, treedef = payload
+    deq = [q.astype(jnp.float32) * s for q, s in zip(qs, scales)]
+    return jax.tree_util.tree_unflatten(treedef, deq)

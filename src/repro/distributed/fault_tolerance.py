@@ -1,0 +1,112 @@
+"""Fault tolerance & straggler mitigation scaffolding (1000+-node posture).
+
+On a real multi-pod deployment these hooks wire into the cluster scheduler
+(GKE/Borg) and jax.distributed; on this CPU container they are exercised by
+unit tests with simulated failures.  The pieces a 1000-node run needs:
+
+  * **HeartbeatMonitor** — per-host heartbeats with a deadline; a missed
+    deadline marks the host suspect (straggler) and, past a second deadline,
+    failed.  The trainer polls ``should_restart()`` between steps.
+  * **StepTimer** — rolling per-step latency stats; a step exceeding
+    ``straggler_factor``x the rolling median flags a straggler (the standard
+    mitigation on TPU pods: preemptively checkpoint + reschedule, since
+    collectives make the whole pod run at the slowest chip's pace).
+  * **restart_policy** — exponential-backoff restart budget, so a flapping
+    host can't livelock the job.
+  * **elastic_plan** — given surviving host count, pick the largest valid
+    mesh (the elastic-restore path in ``checkpoint``): training resumes on
+    fewer chips with the same global batch (more grad accumulation).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class HeartbeatMonitor:
+    hosts: list[str]
+    suspect_after_s: float = 30.0
+    fail_after_s: float = 120.0
+    _last: dict = field(default_factory=dict)
+
+    def beat(self, host: str, now: float | None = None):
+        self._last[host] = time.monotonic() if now is None else now
+
+    def status(self, now: float | None = None) -> dict:
+        now = time.monotonic() if now is None else now
+        out = {}
+        for h in self.hosts:
+            last = self._last.get(h)
+            if last is None:
+                out[h] = "unknown"
+            elif now - last > self.fail_after_s:
+                out[h] = "failed"
+            elif now - last > self.suspect_after_s:
+                out[h] = "suspect"
+            else:
+                out[h] = "healthy"
+        return out
+
+    def failed_hosts(self, now: float | None = None) -> list[str]:
+        return [h for h, s in self.status(now).items() if s == "failed"]
+
+    def should_restart(self, now: float | None = None) -> bool:
+        return bool(self.failed_hosts(now))
+
+
+class StepTimer:
+    """Rolling step-latency tracker; flags straggler steps."""
+
+    def __init__(self, window: int = 50, straggler_factor: float = 2.0):
+        self.window = collections.deque(maxlen=window)
+        self.factor = straggler_factor
+        self.straggler_steps: list[int] = []
+        self._step = 0
+
+    def record(self, seconds: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        self._step += 1
+        med = self.median()
+        self.window.append(seconds)
+        if med is not None and seconds > self.factor * med:
+            self.straggler_steps.append(self._step)
+            return True
+        return False
+
+    def median(self):
+        if len(self.window) < 5:
+            return None
+        vals = sorted(self.window)
+        return vals[len(vals) // 2]
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 10
+    base_backoff_s: float = 5.0
+    restarts: int = 0
+
+    def next_backoff(self) -> float | None:
+        """None = restart budget exhausted (escalate to the operator)."""
+        if self.restarts >= self.max_restarts:
+            return None
+        delay = self.base_backoff_s * (2 ** self.restarts)
+        self.restarts += 1
+        return min(delay, 600.0)
+
+
+def elastic_plan(surviving_chips: int, model_parallel: int = 16
+                 ) -> tuple[int, int] | None:
+    """Largest (data, model) mesh on the survivors, keeping TP intact.
+
+    TP must stay within a pod's fast ICI domain, so ``model`` is fixed and we
+    shrink the data axis to the largest power-of-two of surviving chips.
+    """
+    if surviving_chips < model_parallel:
+        return None
+    data = surviving_chips // model_parallel
+    data = 2 ** (data.bit_length() - 1)          # floor pow2
+    return (data, model_parallel)

@@ -1,0 +1,210 @@
+"""Parallelism rules: param-path -> PartitionSpec.
+
+Scheme (megatron TP x FSDP, per DESIGN SS5):
+  * column-parallel in-projections: shard output dim over ``model``,
+    input dim over the FSDP axes (all data-parallel axes).
+  * row-parallel out-projections: input dim over ``model``, output over FSDP.
+  * embeddings / LM head: vocab over ``model`` (vocab-parallel softmax is a
+    paper-technique site), d over FSDP.
+  * MoE experts: expert axis over ``model`` (EP) when divisible, else
+    expert-hidden TP.
+  * kv projections: over ``model`` only when kv_heads divide tp, else
+    replicated over model (MQA/GQA standard) but still FSDP on d.
+  * small/1-D params (norm scales, biases to padded heads, decays): replicated.
+  * stacked layer axis (leading L) is never sharded.
+
+The rules operate on path strings so they survive pytree nesting changes.
+"""
+
+from __future__ import annotations
+
+import logging
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+log = logging.getLogger(__name__)
+
+
+def _fsdp(mesh) -> tuple[str, ...] | None:
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return axes if axes else None
+
+
+def _tp(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def _rules(cfg: ModelConfig, mesh):
+    """Ordered (regex, spec-builder) table.  Specs are for the *param without
+    the stacked L axis*; the L axis is prepended for block params."""
+    f = _fsdp(mesh)
+    tp = _tp(mesh)
+    kv_tp = "model" if cfg.n_kv_heads % tp == 0 else None
+    ep = (cfg.moe is not None and cfg.moe.n_experts % tp == 0)
+
+    col = P(f, "model")               # (in, out): column-parallel
+    row = P("model", f)               # row-parallel
+    col_b = P("model")                # column bias
+    rep2 = P(None, None)
+    rep1 = P(None)
+
+    table = [
+        # attention (GQA + MLA share prefixes)
+        (r"attn/wq/w$", col), (r"attn/wq/b$", col_b),
+        (r"attn/wk/w$", P(f, kv_tp)), (r"attn/wk/b$", P(kv_tp)),
+        (r"attn/wv/w$", P(f, kv_tp)), (r"attn/wv/b$", P(kv_tp)),
+        (r"attn/wo/w$", row),
+        (r"attn/wkv_a/w$", P(f, None)),          # MLA latent: head-shared
+        (r"attn/wkv_b/w$", col),
+        (r"attn/kv_norm/scale$", rep1),
+        (r"xattn/wq/w$", col), (r"xattn/wk/w$", P(f, kv_tp)),
+        (r"xattn/wv/w$", P(f, kv_tp)), (r"xattn/wo/w$", row),
+        # dense MLP
+        (r"mlp/(up|gate)/w$", col), (r"mlp/down/w$", row),
+        (r"mlp/(up|gate)/b$", col_b), (r"mlp/down/b$", P(f)),
+        # MoE
+        (r"mlp/router/w$", P(f, None)),
+        (r"mlp/w[gu]$", P("model", f, None) if ep else P(None, f, "model")),
+        (r"mlp/wd$", P("model", None, f) if ep else P(None, "model", f)),
+        (r"mlp/shared/(up|gate)/w$", col), (r"mlp/shared/down/w$", row),
+        # hymba mamba half FIRST (its wo/in_* must not hit the rwkv generics):
+        # replicate over model (25 heads don't divide 16; DESIGN SS5 notes
+        # this as a perf lever), FSDP on d.
+        (r"mamba/in_[a-z_]+/w$", P(f, None)),
+        (r"mamba/wo/w$", P(f, None)),
+        (r"mamba/out_norm/scale$", rep1),
+        # rwkv6 time-mix / channel-mix (heads divide tp for rwkv6-1.6b)
+        (r"w[rkvg]/w$", col), (r"wo/w$", row),
+        (r"wa/w$", P(f, None)), (r"wb/w$", P(None, "model")),
+        (r"(w0|dt_bias|a_log)$", rep1),
+        (r"u$", rep2), (r"mu/.*$", rep1), (r"mu_c[kr]$", rep1),
+        (r"ck/w$", col), (r"cv/w$", row), (r"cr/w$", col),
+        # embeddings / head
+        (r"^embed/table$", P("model", f)),       # vocab-parallel
+        (r"^lm_head/w$", P(f, "model")),
+        (r"^patch_proj/w$", P(f, None)),
+        # norms and anything 1-D
+        (r"(ln\w*|norm\w*|out_norm|enc_norm|norm_f)/scale$", rep1),
+    ]
+    return [(re.compile(pat), spec) for pat, spec in table]
+
+
+def param_specs(params_tree, cfg: ModelConfig, mesh, fsdp: bool = True):
+    """Map a (shape-)pytree of params to PartitionSpecs by path rules.
+
+    ``fsdp=False`` replicates params over the data axes (serving: params are
+    read-only, so FSDP all-gathers every step for no memory benefit —
+    model-axis TP sharding is kept)."""
+    rules = _rules(cfg, mesh)
+    if not fsdp:
+        f_set = set(_fsdp(mesh) or ())
+
+        def _is_fsdp(part):
+            if isinstance(part, str):
+                return part in f_set
+            if isinstance(part, tuple):
+                return set(part) <= f_set
+            return False
+
+        def strip(spec):
+            return P(*[None if _is_fsdp(part) else part for part in spec])
+
+        rules = [(rx, strip(spec)) for rx, spec in rules]
+
+    def spec_for(path_str: str, leaf) -> P:
+        stacked = path_str.startswith(("blocks/", "enc_blocks/"))
+        for rx, spec in rules:
+            if rx.search(path_str):
+                parts = list(spec)
+                if stacked:
+                    parts = [None] + parts
+                # pad/truncate to leaf rank (biases on padded-head etc.)
+                nd = len(leaf.shape)
+                parts = (parts + [None] * nd)[:nd]
+                return P(*parts)
+        if max(leaf.shape, default=0) >= 1024:
+            log.warning("sharding fallback to replicated for %s %s",
+                        path_str, leaf.shape)
+        return P(*([None] * len(leaf.shape)))
+
+    flat = jax.tree_util.tree_flatten_with_path(params_tree)[0]
+    paths = ["/".join(str(getattr(k, "key", k)) for k in kp)
+             for kp, _ in flat]
+    specs = [spec_for(p, leaf) for p, (_, leaf) in zip(paths, flat)]
+    treedef = jax.tree_util.tree_structure(params_tree)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, str):
+        return sizes[axes]
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def batch_specs(batch_tree, mesh):
+    """Data-parallel sharding of step inputs: leading batch dim over every
+    non-model axis (when divisible — batch-1 decode stays replicated);
+    scalars replicated."""
+    dp = _fsdp(mesh)
+    dp_n = _axes_size(mesh, dp)
+
+    def spec_for(leaf):
+        if not leaf.shape:
+            return P()
+        lead = dp if leaf.shape[0] % dp_n == 0 else None
+        return P(*([lead] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec_for, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, mesh,
+                seq_shard: bool = False):
+    """Decode-cache sharding: [L, B, S, ...] -> batch over data axes.
+
+    ``seq_shard=True`` additionally shards the cache sequence dim over
+    ``model`` (sequence-parallel decode; the (m, n) partial-attention
+    combine makes this exact — DESIGN SS2.4).  Batch-1 long-context decode
+    relies on it.
+    """
+    dp = _fsdp(mesh)
+    dp_n = _axes_size(mesh, dp)
+    tp_n = _axes_size(mesh, "model")
+
+    def spec_for(path_str, leaf):
+        nd = len(leaf.shape)
+        if nd < 2:
+            return P(*([None] * nd))
+        parts = [None] * nd
+        batch_ok = leaf.shape[1] % dp_n == 0
+        if batch_ok:
+            parts[1] = dp
+        # dim 2 is the cache "long" axis (seq for kv, heads/d for ssm
+        # state): shard it over model when asked (sequence-parallel decode)
+        # or when batch can't shard (batch-1 long-context) — the (m, n)
+        # partial combine / head-parallel state keep this exact.
+        if nd >= 3 and (seq_shard or not batch_ok) \
+                and leaf.shape[2] % tp_n == 0:
+            parts[2] = "model"
+        return P(*parts)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    paths = ["/".join(str(getattr(k, "key", k)) for k in kp)
+             for kp, _ in flat]
+    specs = [spec_for(p, leaf) for p, (_, leaf) in zip(paths, flat)]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

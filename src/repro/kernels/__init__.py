@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's memory-bound hot spots.
+
+Layout (per kernel): ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec
+implementation, ``ops.py`` the jit'd public wrappers (padding, custom_vjp),
+``ref.py`` the pure-jnp oracles the tests sweep against.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    cross_entropy,
+    flash_attention,
+    logsumexp_stats,
+    softmax,
+)

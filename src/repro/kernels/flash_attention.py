@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: flash attention with (m, n) extended-exponent online
+softmax (the paper's representation promoted to the attention inner loop).
+
+Standard flash attention tracks a running row-max of raw scores and rescales
+the output accumulator by ``exp(m_old - m_new)`` — a transcendental with
+rounding error per KV tile.  Here the accumulator state is the paper's
+``(m_sum, n_sum)`` pair: rescale factors are ``2^(n_old - n_new)``, *exact*
+powers of two built by exponent-field arithmetic (``exp2_int``).  The softmax
+numerator for each tile comes straight from ExtExp — no reconstruction, no
+overflow, regardless of score magnitude.
+
+Tiling: grid = (batch*heads, Sq/BQ, Skv/BK), KV innermost so the per-(g, i)
+accumulators (o, m_sum, n_sum) live in VMEM across the whole KV sweep.  QK^T
+and PV hit the MXU (block dims multiples of 128); everything else is VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.numerics import MINUS_INF_N, exp2_int, ext_exp
+from repro.kernels.twopass_softmax import _interpret, _tpu_params
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -jnp.inf
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, n_ref, *,
+                scale: float, causal: bool, window: int | None,
+                block_q: int, block_k: int, sq: int, skv: int,
+                q_len: int, kv_len: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    q = q_ref[0].astype(jnp.float32)                 # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                 # (BK, D)
+    v = v_ref[0].astype(jnp.float32)                 # (BK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal or window is not None or kv_len != skv:
+        qpos = (i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+                + (kv_len - q_len))                  # align sequence ends
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        if kv_len != skv:                            # end-padding is invalid
+            mask &= kpos < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+
+    m, n = ext_exp(s)                                # (BQ, BK) pairs
+    n_loc = jnp.max(n, axis=-1, keepdims=True)       # (BQ, 1)
+    w = m * exp2_int(n - n_loc)                      # numerators / 2^n_loc
+    m_loc = jnp.sum(w, axis=-1, keepdims=True)
+    o_loc = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0] = o_loc
+        m_ref[0] = m_loc
+        n_ref[0] = n_loc
+
+    @pl.when(j > 0)
+    def _fold():
+        n_old = n_ref[0]
+        n_new = jnp.maximum(n_old, n_loc)
+        a_old = exp2_int(n_old - n_new)              # exact 2^k rescales
+        a_loc = exp2_int(n_loc - n_new)
+        o_ref[0] = o_ref[0] * a_old + o_loc * a_loc
+        m_ref[0] = m_ref[0] * a_old + m_loc * a_loc
+        n_ref[0] = n_new
+
+    @pl.when(j == skv // block_k - 1)
+    def _normalize():
+        o_ref[0] = o_ref[0] / m_ref[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "window", "block_q", "block_k",
+                     "q_len", "kv_len"))
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = False, scale: float | None = None,
+                        window: int | None = None,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        q_len: int | None = None,
+                        kv_len: int | None = None) -> jax.Array:
+    """Flash attention, q/k/v: [B, H, S, D] (H pre-expanded to q-heads).
+
+    Sq % block_q == Skv % block_k == 0 required (``ops.flash_attention``
+    pads; ``q_len``/``kv_len`` are the true pre-padding lengths).
+    Returns [B, H, Sq, D] in q.dtype.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_len is None:
+        q_len = sq
+    if kv_len is None:
+        kv_len = skv
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+
+    g = b * h
+    qf = q.reshape(g, sq, d)
+    kf = k.reshape(g, skv, d)
+    vf = v.reshape(g, skv, d)
+    grid = (g, sq // block_q, skv // block_k)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, sq=sq, skv=skv,
+        q_len=q_len, kv_len=kv_len)
+
+    o, m_sum, n_sum = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g_, i, j: (g_, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g_, i, j: (g_, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g_, i, j: (g_, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g_, i, j: (g_, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda g_, i, j: (g_, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda g_, i, j: (g_, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((g, sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, sq, 1), jnp.float32),
+        ],
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "parallel", "arbitrary")),
+    )(qf, kf, vf)
+
+    return o.reshape(b, h, sq, d).astype(q.dtype)

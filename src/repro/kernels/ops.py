@@ -1,0 +1,186 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: arbitrary leading dims (collapsed to rows), padding to block
+multiples (cols padded with -inf, which is an exact monoid zero through the
+whole (m, n) algebra), algorithm dispatch, and ``custom_vjp`` definitions so
+the fused kernels are differentiable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softmax_api import SoftmaxAlgorithm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import threepass_softmax as _tp3
+from repro.kernels import twopass_softmax as _tp2
+from repro.kernels import twopass_xent as _xent
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+def _pick_blocks(rows: int, cols: int, block_rows: int | None,
+                 block_cols: int | None) -> tuple[int, int]:
+    """Block-shape heuristic: full-row tiles for short rows (one grid step
+    along the reduction => no fold overhead), capped tiles for long rows."""
+    if block_cols is None:
+        block_cols = cols if cols <= 4096 else 2048
+        block_cols = _round_up(min(block_cols, _round_up(cols, 128)), 128)
+    if block_rows is None:
+        block_rows = max(8, min(256, _round_up(rows, 8)))
+    return block_rows, block_cols
+
+
+def _as_rows(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+_SOFTMAX_2D = {
+    SoftmaxAlgorithm.TWO_PASS: _tp2.twopass_softmax_2d,
+    SoftmaxAlgorithm.THREE_PASS_RECOMPUTE: _tp3.threepass_recompute_2d,
+    SoftmaxAlgorithm.THREE_PASS_RELOAD: _tp3.threepass_reload_2d,
+}
+
+
+def softmax(x: jax.Array,
+            algorithm: SoftmaxAlgorithm | str = SoftmaxAlgorithm.TWO_PASS,
+            block_rows: int | None = None,
+            block_cols: int | None = None) -> jax.Array:
+    """Last-axis softmax through the Pallas kernels (any leading dims)."""
+    algorithm = SoftmaxAlgorithm(algorithm)
+    x2, lead = _as_rows(x)
+    rows, cols = x2.shape
+    br, bc = _pick_blocks(rows, cols, block_rows, block_cols)
+    pr, pc = _round_up(rows, br), _round_up(cols, bc)
+    padded = jnp.full((pr, pc), -jnp.inf, x2.dtype)
+    # Padded rows are all -inf: harmless garbage, sliced away below.  Padded
+    # cols are -inf: exact (m=0) zero of the monoid / exp(-inf)=0 for Alg 1/2.
+    padded = jax.lax.dynamic_update_slice(padded, x2, (0, 0))
+    y = _SOFTMAX_2D[algorithm](padded, block_rows=br, block_cols=bc)
+    return y[:rows, :cols].reshape(*lead, cols)
+
+
+# ---------------------------------------------------------------------------
+# Fused cross-entropy (differentiable): fwd = pass 1, bwd = pass 2.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  block_t: int | None = None,
+                  block_v: int | None = None) -> jax.Array:
+    """Per-token CE loss, probabilities never materialized.  [T,V],[T]->[T]."""
+    loss, _, _ = _xent_fwd_padded(logits, labels, block_t, block_v)
+    return loss
+
+
+def _xent_blocks(t, v, block_t, block_v):
+    if block_v is None:
+        block_v = min(_round_up(v, 128), 2048)
+    if block_t is None:
+        block_t = max(8, min(256, _round_up(t, 8)))
+    return block_t, block_v
+
+
+def _xent_pad(logits, labels, bt, bv):
+    t, v = logits.shape
+    pt, pv = _round_up(t, bt), _round_up(v, bv)
+    lp = jnp.full((pt, pv), -jnp.inf, logits.dtype)
+    lp = jax.lax.dynamic_update_slice(lp, logits, (0, 0))
+    lab = jnp.zeros((pt,), jnp.int32).at[:t].set(labels.astype(jnp.int32))
+    return lp, lab, pt, pv
+
+
+def _xent_fwd_padded(logits, labels, block_t, block_v):
+    t, v = logits.shape
+    bt, bv = _xent_blocks(t, v, block_t, block_v)
+    lp, lab, _, _ = _xent_pad(logits, labels, bt, bv)
+    # Padded rows: logits all -inf with label 0 -> label_logit = -inf,
+    # lse = log(0) = -inf -> loss = nan, sliced off before use.
+    loss, m_sum, n_sum = _xent.xent_fwd_2d(lp, lab, block_t=bt, block_v=bv)
+    return loss[:t], m_sum, n_sum
+
+
+def _ce_fwd(logits, labels, block_t, block_v):
+    loss, m_sum, n_sum = _xent_fwd_padded(logits, labels, block_t, block_v)
+    return loss, (logits, labels, m_sum, n_sum)
+
+
+def _ce_bwd(block_t, block_v, res, dloss):
+    logits, labels, m_sum, n_sum = res
+    t, v = logits.shape
+    bt, bv = _xent_blocks(t, v, block_t, block_v)
+    lp, lab, pt, _ = _xent_pad(logits, labels, bt, bv)
+    dl = jnp.zeros((pt,), jnp.float32).at[:t].set(dloss.astype(jnp.float32))
+    dlogits = _xent.xent_bwd_2d(lp, lab, m_sum, n_sum, dl,
+                                block_t=bt, block_v=bv)
+    return dlogits[:t, :v].astype(logits.dtype), None
+
+
+cross_entropy.defvjp(_ce_fwd, _ce_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (fwd kernel; bwd via the jnp reference formula -- the
+# recompute pass is algorithmically the paper's pass 2, XLA-fused here).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = False, scale: float | None = None,
+                    window: int | None = None) -> jax.Array:
+    return _flash_fwd_padded(q, k, v, causal, scale, window)
+
+
+def _flash_fwd_padded(q, k, v, causal, scale, window):
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    bq = min(_fa.DEFAULT_BLOCK_Q, _round_up(sq, 128))
+    bk = min(_fa.DEFAULT_BLOCK_K, _round_up(skv, 128))
+    psq, pskv = _round_up(sq, bq), _round_up(skv, bk)
+    if psq != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, psq - sq), (0, 0)))
+    if pskv != skv:
+        # Padded KV must not receive weight: pad k with a sentinel the mask
+        # kills.  Without masks, kernel handles it via -inf scores: pad k so
+        # scores become -inf is not possible with finite pads, so instead we
+        # always enable the window/causal mask path by padding at the END and
+        # masking kpos >= skv.
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pskv - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pskv - skv), (0, 0)))
+    o = _fa.flash_attention_gqa(
+        q, k, v, causal=causal, scale=scale, window=window,
+        block_q=bq, block_k=bk, kv_len=skv, q_len=sq)
+    return o[:, :, :sq, :]
+
+
+def _flash_fwd(q, k, v, causal, scale, window):
+    return _flash_fwd_padded(q, k, v, causal, scale, window), (q, k, v)
+
+
+def _flash_bwd(causal, scale, window, res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.attention_ref(q_, k_, v_, causal=causal,
+                                              scale=scale, window=window),
+        q, k, v)
+    return vjp(do)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def logsumexp_stats(x: jax.Array, block_rows: int | None = None,
+                    block_cols: int | None = None):
+    """Pass-1 stats (m_sum, n_sum) for 2-D x via the Pallas kernel."""
+    rows, cols = x.shape
+    br, bc = _pick_blocks(rows, cols, block_rows, block_cols)
+    pr, pc = _round_up(rows, br), _round_up(cols, bc)
+    padded = jnp.full((pr, pc), -jnp.inf, x.dtype)
+    padded = jax.lax.dynamic_update_slice(padded, x, (0, 0))
+    m, n = _tp2.twopass_stats_2d(padded, block_rows=br, block_cols=bc)
+    return m[:rows], n[:rows]

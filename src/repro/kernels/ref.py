@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *specifications*: small, obviously-correct implementations the
+kernels are tested against (``tests/test_kernels_*`` sweep shapes/dtypes and
+``assert_allclose`` kernel vs oracle).  They intentionally use the plain
+max-subtraction formulation (not ExtExp) so kernel and oracle share no code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Rowwise softmax oracle (last axis), f32 accumulation."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf - mu)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def logsumexp_ref(x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.max(xf, axis=-1, keepdims=True)
+    return (jnp.log(jnp.sum(jnp.exp(xf - mu), axis=-1)) + mu[..., 0]).astype(
+        x.dtype)
+
+
+def cross_entropy_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token CE loss oracle: lse(logits) - logits[label].  f32 out."""
+    lf = logits.astype(jnp.float32)
+    lse = logsumexp_ref(lf)
+    label_logit = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    return lse - label_logit
+
+
+def cross_entropy_grad_ref(logits: jax.Array, labels: jax.Array,
+                           dloss: jax.Array) -> jax.Array:
+    """d(CE)/dlogits = (softmax(logits) - onehot(labels)) * dloss."""
+    p = softmax_ref(logits.astype(jnp.float32))
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return ((p - onehot) * dloss[:, None]).astype(logits.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = False, scale: float | None = None,
+                  window: int | None = None) -> jax.Array:
+    """Multi-head attention oracle.  q,k,v: [B, H, S, D] (H already GQA-
+    expanded).  ``window`` = sliding-window size (inclusive of self)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sq, skv = q.shape[2], k.shape[2]
+    qi = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode-friendly)
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(
+        q.dtype)

@@ -1,0 +1,180 @@
+"""Pallas TPU kernels: the Three-Pass softmax baselines (paper Alg 1 & 2).
+
+These exist because the paper's evaluation is a *comparison*: Alg 1
+(recompute) and Alg 2 (reload) are implemented with exactly the same tiling,
+exp polynomial, and accumulation discipline as the Two-Pass kernel so the
+only difference is the memory-pass structure (4N vs 5N vs 3N HBM traffic).
+
+The exp used in passes 2/3 is the paper's Alg 4: same Cody-Waite reduction
+and degree-5 polynomial as ExtExp, plus the reconstruction ``p * 2^n`` done
+with the AVX2-style exponent-field trick (exact here because ``x - mu <= 0``
+implies ``n <= 0`` — the paper's footnote 4 assumption).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.numerics import exp2_int, ext_exp
+from repro.kernels.twopass_softmax import (
+    DEFAULT_BLOCK_COLS,
+    DEFAULT_BLOCK_ROWS,
+    _interpret,
+    _tpu_params,
+)
+
+
+def _exp_nonpos(x: jax.Array) -> jax.Array:
+    """Paper Alg 4 for x <= 0: poly + exact 2^n reconstruction (n <= 0)."""
+    m, n = ext_exp(x)
+    return m * exp2_int(n)
+
+
+def _max_kernel(x_ref, mu_ref):
+    """Pass 1 (both algorithms): running row max."""
+    j = pl.program_id(1)
+    loc = jnp.max(x_ref[...].astype(jnp.float32), axis=-1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _():
+        mu_ref[...] = loc
+
+    @pl.when(j > 0)
+    def _():
+        mu_ref[...] = jnp.maximum(mu_ref[...], loc)
+
+
+def _sumexp_kernel(x_ref, mu_ref, sig_ref):
+    """Alg 1 pass 2: sigma = sum exp(x - mu) (read-only pass over x)."""
+    j = pl.program_id(1)
+    e = _exp_nonpos(x_ref[...].astype(jnp.float32) - mu_ref[...])
+    loc = jnp.sum(e, axis=-1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _():
+        sig_ref[...] = loc
+
+    @pl.when(j > 0)
+    def _():
+        sig_ref[...] += loc
+
+
+def _recompute_scale_kernel(x_ref, mu_ref, sig_ref, y_ref):
+    """Alg 1 pass 3: y = exp(x - mu) / sigma (exp recomputed)."""
+    e = _exp_nonpos(x_ref[...].astype(jnp.float32) - mu_ref[...])
+    y_ref[...] = (e * (1.0 / sig_ref[...])).astype(y_ref.dtype)
+
+
+def _exp_store_kernel(x_ref, mu_ref, y_ref, sig_ref):
+    """Alg 2 pass 2: store y = exp(x - mu) AND accumulate sigma."""
+    j = pl.program_id(1)
+    e = _exp_nonpos(x_ref[...].astype(jnp.float32) - mu_ref[...])
+    y_ref[...] = e.astype(y_ref.dtype)
+    loc = jnp.sum(e, axis=-1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _():
+        sig_ref[...] = loc
+
+    @pl.when(j > 0)
+    def _():
+        sig_ref[...] += loc
+
+
+def _inplace_scale_kernel(y_in_ref, sig_ref, y_ref):
+    """Alg 2 pass 3: in-place y *= 1/sigma (STREAM-Scale analogue)."""
+    y_ref[...] = (y_in_ref[...].astype(jnp.float32)
+                  * (1.0 / sig_ref[...])).astype(y_ref.dtype)
+
+
+def _row_stat_specs(block_rows):
+    return pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0))
+
+
+def _tile_spec(block_rows, block_cols):
+    return pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))
+
+
+def _rowmax(x, grid, block_rows, block_cols):
+    rows = x.shape[0]
+    return pl.pallas_call(
+        _max_kernel,
+        grid=grid,
+        in_specs=[_tile_spec(block_rows, block_cols)],
+        out_specs=_row_stat_specs(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "arbitrary")),
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def threepass_recompute_2d(x: jax.Array,
+                           block_rows: int = DEFAULT_BLOCK_ROWS,
+                           block_cols: int = DEFAULT_BLOCK_COLS) -> jax.Array:
+    """Paper Alg 1 in Pallas: 3 read passes + 1 write pass (4N traffic)."""
+    rows, cols = x.shape
+    assert rows % block_rows == 0 and cols % block_cols == 0, (rows, cols)
+    grid = (rows // block_rows, cols // block_cols)
+
+    mu = _rowmax(x, grid, block_rows, block_cols)
+    sigma = pl.pallas_call(
+        _sumexp_kernel,
+        grid=grid,
+        in_specs=[_tile_spec(block_rows, block_cols),
+                  _row_stat_specs(block_rows)],
+        out_specs=_row_stat_specs(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "arbitrary")),
+    )(x, mu)
+    return pl.pallas_call(
+        _recompute_scale_kernel,
+        grid=grid,
+        in_specs=[_tile_spec(block_rows, block_cols),
+                  _row_stat_specs(block_rows), _row_stat_specs(block_rows)],
+        out_specs=_tile_spec(block_rows, block_cols),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "parallel")),
+    )(x, mu, sigma)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def threepass_reload_2d(x: jax.Array,
+                        block_rows: int = DEFAULT_BLOCK_ROWS,
+                        block_cols: int = DEFAULT_BLOCK_COLS) -> jax.Array:
+    """Paper Alg 2 in Pallas: stores exponentials, rescales in place (5N)."""
+    rows, cols = x.shape
+    assert rows % block_rows == 0 and cols % block_cols == 0, (rows, cols)
+    grid = (rows // block_rows, cols // block_cols)
+
+    mu = _rowmax(x, grid, block_rows, block_cols)
+    y, sigma = pl.pallas_call(
+        _exp_store_kernel,
+        grid=grid,
+        in_specs=[_tile_spec(block_rows, block_cols),
+                  _row_stat_specs(block_rows)],
+        out_specs=[_tile_spec(block_rows, block_cols),
+                   _row_stat_specs(block_rows)],
+        out_shape=[jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32)],
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "arbitrary")),
+    )(x, mu)
+    # Pass 3 aliases its y input to its output: a true in-place scale.
+    return pl.pallas_call(
+        _inplace_scale_kernel,
+        grid=grid,
+        in_specs=[_tile_spec(block_rows, block_cols),
+                  _row_stat_specs(block_rows)],
+        out_specs=_tile_spec(block_rows, block_cols),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        input_output_aliases={0: 0} if x.dtype == jnp.float32 else {},
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "parallel")),
+    )(y, sigma)

@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape) cell, on the 16x16 single-pod mesh
+AND the 2x16x16 multi-pod mesh: ``jax.jit(step).lower(**input_specs)
+.compile()`` must succeed; we record memory_analysis (fits-per-device proof),
+cost_analysis (FLOPs/bytes), and the parsed collective schedule to
+``experiments/dryrun/<arch>__<cell>__<mesh>.json`` (incremental: cells with
+an existing JSON are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-20b \
+      --shape train_4k [--multi-pod] [--no-cost-model] [--force]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--no-cost-model", action="store_true")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--moe-impl", default="dispatch")
+    p.add_argument("--microbatches", type=int, default=4)
+    p.add_argument("--seq-shard-decode", action="store_true")
+    p.add_argument("--out-dir", default="experiments/dryrun")
+    args = p.parse_args()
+
+    from repro.configs import ARCH_IDS, SHAPES
+    from repro.launch.lowering import lower_and_analyze
+    from repro.launch.mesh import make_production_mesh
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            path = out_dir / f"{arch}__{shape}__{mesh_tag}.json"
+            want_cm = not args.no_cost_model and not args.multi_pod
+            cached = json.loads(path.read_text()) if path.exists() else None
+            if cached is not None and not args.force:
+                needs_cm = (want_cm and not cached.get("skipped")
+                            and "extrapolated" not in cached)
+                if not needs_cm:
+                    print(f"[cached] {path.name}")
+                    continue
+                # incremental upgrade: add the L-extrapolated cost model
+                from repro.launch.lowering import extrapolate_cost
+
+                t0 = time.time()
+                try:
+                    cached["extrapolated"] = extrapolate_cost(
+                        arch, shape, mesh, moe_impl=args.moe_impl,
+                        microbatches=args.microbatches,
+                        seq_shard_decode=args.seq_shard_decode)
+                    cached["elapsed_cm_s"] = round(time.time() - t0, 1)
+                    path.write_text(json.dumps(cached, indent=1))
+                    print(f"[+costmodel] {path.name} "
+                          f"({cached['elapsed_cm_s']}s)")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, repr(e)))
+                    print(f"[FAIL cm] {arch} x {shape}: {e}")
+                    traceback.print_exc()
+                continue
+            t0 = time.time()
+            try:
+                res = lower_and_analyze(
+                    arch, shape, mesh,
+                    with_cost_model=want_cm,
+                    moe_impl=args.moe_impl,
+                    microbatches=args.microbatches,
+                    seq_shard_decode=args.seq_shard_decode)
+                res["elapsed_s"] = round(time.time() - t0, 1)
+                path.write_text(json.dumps(res, indent=1))
+                status = "SKIP" if res.get("skipped") else "OK"
+                print(f"[{status}] {arch} x {shape} x {mesh_tag} "
+                      f"({res['elapsed_s']}s)")
+                if not res.get("skipped"):
+                    print("   memory:", res["memory"])
+                    print("   cost:", res["scanned"])
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((arch, shape, repr(e)))
+                print(f"[FAIL] {arch} x {shape}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("\nAll requested dry-run cells green.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

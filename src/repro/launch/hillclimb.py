@@ -1,0 +1,104 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (same contract as dryrun.py).
+
+"""§Perf hillclimbing driver: named variants per cell, before/after deltas.
+
+Each variant is one hypothesis -> change pair from EXPERIMENTS.md §Perf;
+results land in experiments/hillclimb/<arch>__<cell>__<variant>.json with
+the same schema as the dry-run artifacts, so the roofline math is shared.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch qwen2.5-14b --shape decode_32k --variant seq_parallel_decode
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+# Named variant -> build_cell kwargs.
+VARIANTS = {
+    "baseline": {},
+    # decode: shard the KV-cache sequence over model + (m,n) partial combine
+    "seq_parallel_decode": {
+        "seq_shard_decode": True,
+        "cfg_overrides": {"decode_seq_parallel": True},
+    },
+    # decode: cache in the cache's natural layout but q-heads replicated
+    "seq_parallel_cache_only": {"seq_shard_decode": True},
+    # train: microbatch count sweep
+    "mb1": {"microbatches": 1},
+    "mb2": {"microbatches": 2},
+    "mb8": {"microbatches": 8},
+    # train: bf16 gradient all-reduce payload
+    "grad_bf16": {"grad_compression": "bf16"},
+    # moe: dropless dense instead of capacity dispatch
+    "moe_dense": {"moe_impl": "dense"},
+    # moe: gather/scatter dispatch (0-flop dispatch, same capacity rules)
+    "moe_gather": {"moe_impl": "gather"},
+    # decode: keep logits vocab-sharded on output (defer the gather to the
+    # sampler, which is itself a sharded two-pass softmax)
+    "logits_sharded": {"logits_sharded": True},
+    # decode: params TP-only (no FSDP): serving params are read-only, the
+    # per-layer FSDP all-gathers are pure overhead
+    "decode_no_fsdp": {"decode_no_fsdp": True},
+    # decode: sharded logits + sequence-parallel cache+attention
+    "seq_parallel_full": {
+        "seq_shard_decode": True, "logits_sharded": True,
+        "cfg_overrides": {"decode_seq_parallel": True},
+    },
+    # paper-algorithm ablation at every softmax site
+    "three_pass_recompute": {
+        "cfg_overrides": {"softmax_algorithm": "three_pass_recompute"}},
+    "three_pass_reload": {
+        "cfg_overrides": {"softmax_algorithm": "three_pass_reload"}},
+}
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    p.add_argument("--no-cost-model", action="store_true")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--out-dir", default="experiments/hillclimb")
+    args = p.parse_args()
+
+    from repro.launch.lowering import lower_and_analyze
+    from repro.launch.mesh import make_production_mesh
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{args.arch}__{args.shape}__{args.variant}.json"
+    if path.exists() and not args.force:
+        print(f"[cached] {path.name}")
+        print(path.read_text())
+        return 0
+
+    mesh = make_production_mesh()
+    t0 = time.time()
+    res = lower_and_analyze(args.arch, args.shape, mesh,
+                            with_cost_model=not args.no_cost_model,
+                            **VARIANTS[args.variant])
+    res["variant"] = args.variant
+    res["elapsed_s"] = round(time.time() - t0, 1)
+    path.write_text(json.dumps(res, indent=1))
+    print(f"[OK] {args.arch} x {args.shape} x {args.variant} "
+          f"({res['elapsed_s']}s)")
+    print("   memory:", res.get("memory"))
+    print("   scanned:", res.get("scanned"))
+    if "extrapolated" in res:
+        print("   extrapolated:", {k: v for k, v in
+                                   res["extrapolated"].items()
+                                   if not k.endswith(("_base",
+                                                      "_per_layer"))})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

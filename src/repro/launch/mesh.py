@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init; tests see
+the real 1-CPU world).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ('data', 'model'); 2x16x16 = 512 with a leading
+    'pod' axis.  DP runs over pod x data; TP/EP over model."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (elastic restore targets, tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes gradients are reduced over (everything that is not 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def mesh_tp(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)

@@ -1,0 +1,3 @@
+"""Model zoo: layers, attention (GQA/MLA/SWA), MoE, SSM/RWKV, assemblies."""
+
+from repro.models.model_zoo import Model, build_model, input_specs  # noqa: F401

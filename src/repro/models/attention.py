@@ -1,0 +1,378 @@
+"""Attention: GQA/MQA/SWA + DeepSeek MLA, with the paper's (m, n) streaming
+softmax as the memory-efficient core.
+
+The chunked core (``mn_chunk_attention``) is the Two-Pass representation
+promoted to attention: KV is consumed in chunks; the running output
+accumulator is rescaled by *exact* powers of two (``exp2_int``) carried in
+the (m_sum, n_sum) pair.  Chunk loops are **Python-unrolled** (not lax.scan)
+deliberately: XLA's ``cost_analysis`` counts scan bodies once, and the
+roofline harness needs truthful FLOP/byte counts (see EXPERIMENTS.md
+methodology).
+
+GQA is computed in grouped form — kv heads are never materialized repeated —
+except when TP head-padding breaks the group structure (hymba: 25q/5kv ->
+32q), where kv is index-expanded per q-head.
+
+Head padding under TP (DESIGN SS4): q-heads are zero-padded *per kv group* up
+to ``padded_heads(tp) // n_kv_heads`` so grouping survives.  Zero out-proj
+rows make padding exact in both forward and gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import numerics, softmax_api
+from repro.distributed.autoshard import hint
+from repro.models import layers
+
+NEG_INF = -jnp.inf
+
+
+def head_layout(cfg: ModelConfig, tp: int):
+    """Returns (hq_padded, grouped, real_head_mask, head_to_kv).
+
+    grouped=True: layout is group-major, g_pad = hq/hkv q-heads per kv head,
+    the first g_real of each group real.  grouped=False: kv expanded per
+    head via ``head_to_kv`` (first n_heads real, padded map to kv 0).
+    All outputs are STATIC (numpy): usable under eval_shape tracing.
+    """
+    import numpy as np
+
+    hq = cfg.padded_heads(tp)
+    hkv = cfg.n_kv_heads
+    if hq % hkv == 0 and hkv % tp == 0:
+        # kv heads shard evenly over TP: grouped layout keeps kv compact.
+        g_pad = hq // hkv
+        g_real = cfg.n_heads // hkv
+        mask = (np.arange(hq) % g_pad) < g_real
+        return hq, True, mask, None
+    # kv replicated (or grouping broken by padding): expand kv per q-head so
+    # the flat q-head dim (a tp multiple by construction) carries ``model``.
+    g_real = max(1, cfg.n_heads // hkv)
+    mask = np.arange(hq) < cfg.n_heads
+    head_to_kv = np.minimum(np.arange(hq) // g_real, hkv - 1)
+    return hq, False, mask, head_to_kv
+
+
+def _zero_pad_heads(w: jax.Array, mask, head_dim: int,
+                    axis: int) -> jax.Array:
+    """Zero weight slices belonging to padded heads along ``axis``.
+    ``mask`` is a static numpy bool array."""
+    import numpy as np
+
+    if bool(np.asarray(mask).all()):
+        return w
+    full = np.repeat(np.asarray(mask), head_dim)
+    br = [1] * w.ndim
+    br[axis] = full.shape[0]
+    return w * jnp.asarray(full.reshape(br), dtype=w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cores.  q: [B, Hkv, G, Sq, D]; k: [B, Hkv, Skv, D]; v: [B, Hkv, Skv, Dv].
+# ---------------------------------------------------------------------------
+def _block_mask(qpos, kpos, causal, window, kv_len):
+    mask = kpos[None, :] < kv_len
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask
+
+
+def mn_chunk_attention(q, k, v, *, causal, window=None, scale,
+                       q_offset: int = 0, kv_len=None,
+                       n_q_chunks: int = 1, n_kv_chunks: int = 1):
+    """(m, n)-streamed chunked attention (paper algebra, pure JAX).
+
+    Python-unrolled chunk loops; causal/window-dead chunks pruned at trace
+    time.  ``kv_len`` may be a traced scalar (dynamic cache fill)."""
+    b, hkv, g, sq, d = q.shape
+    skv = k.shape[2]
+    dv = v.shape[3]
+    kv_len = skv if kv_len is None else kv_len
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+
+    qc = -(-sq // n_q_chunks)
+    kc = -(-skv // n_kv_chunks)
+    outs = []
+    for i in range(n_q_chunks):
+        q_blk = qf[:, :, :, i * qc:(i + 1) * qc]
+        bq = q_blk.shape[3]
+        if bq == 0:
+            continue
+        qpos = jnp.arange(i * qc, i * qc + bq) + q_offset
+        o_acc = jnp.zeros((b, hkv, g, bq, dv), jnp.float32)
+        m_acc = jnp.zeros((b, hkv, g, bq, 1), jnp.float32)
+        n_acc = jnp.full((b, hkv, g, bq, 1), numerics.MINUS_INF_N)
+        for j in range(n_kv_chunks):
+            lo, hi = j * kc, min(skv, (j + 1) * kc)
+            if lo >= hi:
+                continue
+            if causal and lo > (i * qc + bq - 1) + q_offset:
+                continue                    # trace-time causal pruning
+            if window is not None and hi - 1 <= i * qc + q_offset - window:
+                continue                    # trace-time window pruning
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk,
+                           kf[:, :, lo:hi]) * scale
+            mask = _block_mask(qpos, jnp.arange(lo, hi), causal, window,
+                               kv_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+            m, n = numerics.ext_exp(s)
+            n_loc = jnp.max(n, axis=-1, keepdims=True)
+            w = m * numerics.exp2_int(n - n_loc)
+            m_loc = jnp.sum(w, axis=-1, keepdims=True)
+            o_loc = jnp.einsum("bhgqk,bhkd->bhgqd", w, vf[:, :, lo:hi])
+
+            n_new = jnp.maximum(n_acc, n_loc)
+            a_acc = numerics.exp2_int(n_acc - n_new)
+            a_loc = numerics.exp2_int(n_loc - n_new)
+            o_acc = o_acc * a_acc + o_loc * a_loc
+            m_acc = m_acc * a_acc + m_loc * a_loc
+            n_acc = n_new
+        outs.append(o_acc / jnp.maximum(m_acc, 1e-37))
+    return jnp.concatenate(outs, axis=3).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal, window=None, scale, q_offset=0,
+                   kv_len=None, algorithm="two_pass", use_kernels=False,
+                   qpos=None):
+    """Single-block grouped attention; softmax via the selectable API (this
+    is where paper Alg 1/2/3 are interchangeable at model level).
+    ``qpos`` overrides query positions (traced, for decode)."""
+    sq, skv = q.shape[3], k.shape[2]
+    kv_len = skv if kv_len is None else kv_len
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if qpos is None:
+        qpos = jnp.arange(sq) + q_offset
+    mask = _block_mask(qpos, jnp.arange(skv), causal, window, kv_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = softmax_api.softmax(s, axis=-1, algorithm=algorithm,
+                            use_kernel=use_kernels)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _pick_chunks(sq: int, skv: int) -> tuple[int, int]:
+    """Single block while score tiles stay small; else ceil-div into up to
+    8 x 16 chunks (HLO stays compact, tiles stay VMEM-sized)."""
+    if sq * skv <= 2048 * 2048:
+        return 1, 1
+    return min(8, -(-sq // 2048)), min(16, -(-skv // 2048))
+
+
+def attention_core(q, k, v, *, causal, window, scale, q_offset=0,
+                   kv_len=None, qpos=None, cfg: ModelConfig):
+    nq, nkv = _pick_chunks(q.shape[3], k.shape[2])
+    if (nq == 1 and nkv == 1) or qpos is not None:
+        return full_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, kv_len=kv_len, qpos=qpos,
+            algorithm=cfg.softmax_algorithm, use_kernels=cfg.use_kernels)
+    return mn_chunk_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, kv_len=kv_len, n_q_chunks=nq, n_kv_chunks=nkv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (llama-family + whisper cross-attention).
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype, tp: int = 1) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    hq, _, mask, _ = head_layout(cfg, tp)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.init_dense(ks[0], d, hq * hd, dtype, bias=cfg.qkv_bias),
+        "wk": layers.init_dense(ks[1], d, cfg.n_kv_heads * hd, dtype,
+                                bias=cfg.qkv_bias),
+        "wv": layers.init_dense(ks[2], d, cfg.n_kv_heads * hd, dtype,
+                                bias=cfg.qkv_bias),
+        "wo": layers.init_dense(ks[3], hq * hd, d, dtype),
+    }
+    p["wq"]["w"] = _zero_pad_heads(p["wq"]["w"], mask, hd, 1)
+    if cfg.qkv_bias:
+        p["wq"]["b"] = _zero_pad_heads(p["wq"]["b"], mask, hd, 0)
+    p["wo"]["w"] = _zero_pad_heads(p["wo"]["w"], mask, hd, 0)
+    return p
+
+
+def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
+              tp: int = 1, causal: bool = True, cache: dict | None = None,
+              cache_pos=None, xkv: jax.Array | None = None,
+              use_rope: bool = True, window_override: int | str = "cfg",
+              ring_valid=None):
+    """GQA attention.  x: [B, S, d].  ``xkv`` switches to cross-attention
+    (kv from encoder states, no rope/causal).  With ``cache`` (+``cache_pos``
+    traced scalar): write-then-attend over the cache.  Returns
+    (out, new_cache)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim()
+    hq, grouped, _, head_to_kv = head_layout(cfg, tp)
+    hkv = cfg.n_kv_heads
+    window = cfg.swa_window if window_override == "cfg" else window_override
+
+    src = x if xkv is None else xkv
+    seq_par = bool(cfg.decode_seq_parallel) and cache is not None
+    kv_tp = "tp" if (hkv % tp == 0 and tp > 1 and not seq_par) else None
+    head_tp = None if seq_par else "tp"
+    q = hint(layers.dense(p["wq"], x).reshape(b, s, hq, hd),
+             "dp", None, head_tp, None)
+    k = hint(layers.dense(p["wk"], src).reshape(b, src.shape[1], hkv, hd),
+             "dp", None, kv_tp, None)
+    v = hint(layers.dense(p["wv"], src).reshape(b, src.shape[1], hkv, hd),
+             "dp", None, kv_tp, None)
+
+    if use_rope and xkv is None:
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+
+    new_cache = None
+    kv_len = None
+    qpos = None
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]            # [B, Smax, Hkv, hd]
+        if cache_pos is not None:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cache_pos, 0, 0))
+            kv_len = cache_pos + s
+            qpos = jnp.arange(s) + cache_pos
+        if seq_par:
+            # sequence-parallel decode: cache seq over the model axis; each
+            # shard attends its chunk, the (m, n) algebra combines partials
+            # (XLA inserts the reductions for the sharded-softmax form).
+            ck = hint(ck, "dp", "tp", None, None)
+            cv = hint(cv, "dp", "tp", None, None)
+        k, v = ck, cv
+        new_cache = {"k": ck, "v": cv}
+    if ring_valid is not None:
+        # SWA ring buffer: every written slot holds an in-window position
+        # (RoPE baked at write time), so only a validity bound applies —
+        # causal/window constraints are structural invariants of the ring.
+        kv_len = ring_valid
+        qpos = None
+        causal = False
+        window = None
+
+    kk = k.transpose(0, 2, 1, 3)                   # [B, Hkv, Skv, hd]
+    vv = v.transpose(0, 2, 1, 3)
+    seq_tp = "tp" if seq_par else None
+    grouped_layout = grouped or (seq_par and hq % hkv == 0)
+    if grouped_layout:
+        # seq-parallel keeps kv COMPACT (no head expansion): reads dominate
+        # decode, and the sharded axis is the sequence.
+        gq = hq // hkv
+        qg = hint(q.reshape(b, s, hkv, gq, hd).transpose(0, 2, 3, 1, 4),
+                  "dp", head_tp, None, None, None)
+        kk = hint(kk, "dp", None if seq_par else "tp", seq_tp, None)
+        vv = hint(vv, "dp", None if seq_par else "tp", seq_tp, None)
+    else:                                          # kv expanded per q-head
+        kk = hint(kk[:, head_to_kv], "dp", head_tp, seq_tp, None)
+        vv = hint(vv[:, head_to_kv], "dp", head_tp, seq_tp, None)
+        qg = hint(q.transpose(0, 2, 1, 3)[:, :, None],
+                  "dp", head_tp, None, None, None)  # [B, Hq, 1, S, hd]
+
+    o = attention_core(qg, kk, vv, causal=causal and xkv is None,
+                       window=window, scale=hd ** -0.5, kv_len=kv_len,
+                       qpos=qpos, cfg=cfg)
+    if grouped_layout:
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, s, hq * hd)
+    else:
+        o = o[:, :, 0].transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    o = hint(o, "dp", None, None if seq_par else "tp")
+    return layers.dense(p["wo"], o), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA: DeepSeek-V2 Multi-head Latent Attention (compressed KV cache).
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig, dtype, tp: int = 1) -> dict:
+    import numpy as np
+
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.padded_heads(tp)
+    mask = np.arange(h) < cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": layers.init_dense(ks[0], d, h * qk, dtype),
+        # down-proj: latent c (kv_lora) + shared rope key
+        "wkv_a": layers.init_dense(ks[1], d,
+                                   m.kv_lora_rank + m.qk_rope_head_dim,
+                                   dtype),
+        "kv_norm": layers.init_rmsnorm(m.kv_lora_rank, dtype),
+        # up-proj from latent: per-head nope-k and v
+        "wkv_b": layers.init_dense(ks[2], m.kv_lora_rank,
+                                   h * (m.qk_nope_head_dim + m.v_head_dim),
+                                   dtype),
+        "wo": layers.init_dense(ks[3], h * m.v_head_dim, d, dtype),
+    }
+    p["wq"]["w"] = _zero_pad_heads(p["wq"]["w"], mask, qk, 1)
+    p["wkv_b"]["w"] = _zero_pad_heads(
+        p["wkv_b"]["w"], mask, m.qk_nope_head_dim + m.v_head_dim, 1)
+    p["wo"]["w"] = _zero_pad_heads(p["wo"]["w"], mask, m.v_head_dim, 0)
+    return p
+
+
+def mla_attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
+                  tp: int = 1, cache: dict | None = None, cache_pos=None):
+    """MLA forward.  Cache stores only (c_latent, k_rope) — the compressed
+    representation that is MLA's point; per-head K/V are re-expanded from the
+    latent on read."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.padded_heads(tp)
+    nd, rd, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = layers.dense(p["wq"], x).reshape(b, s, h, nd + rd)
+    qn, qr = q[..., :nd], q[..., nd:]
+    qr = layers.apply_rope(qr, cos, sin)
+
+    a = layers.dense(p["wkv_a"], x)
+    c = layers.rmsnorm(p["kv_norm"], a[..., :m.kv_lora_rank],
+                       eps=cfg.norm_eps)
+    kr = layers.apply_rope(a[..., m.kv_lora_rank:][:, :, None, :],
+                           cos, sin)[:, :, 0, :]   # [B, S, rd] head-shared
+
+    new_cache = None
+    kv_len = None
+    qpos = None
+    if cache is not None:
+        cc, ckr = cache["c"], cache["kr"]
+        if cache_pos is not None:
+            cc = jax.lax.dynamic_update_slice(cc, c.astype(cc.dtype),
+                                              (0, cache_pos, 0))
+            ckr = jax.lax.dynamic_update_slice(ckr, kr.astype(ckr.dtype),
+                                               (0, cache_pos, 0))
+            kv_len = cache_pos + s
+            qpos = jnp.arange(s) + cache_pos
+        c, kr = cc, ckr
+        new_cache = {"c": cc, "kr": ckr}
+
+    kv = layers.dense(p["wkv_b"], c).reshape(b, c.shape[1], h, nd + vd)
+    kn, v = kv[..., :nd], kv[..., nd:]
+
+    qf = jnp.concatenate([qn, qr], -1)
+    kf = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :],
+                              (b, kr.shape[1], h, rd))], -1)
+
+    qg = hint(qf.transpose(0, 2, 1, 3)[:, :, None],
+              "dp", "tp", None, None, None)        # [B, H, 1, S, nd+rd]
+    kk = hint(kf.transpose(0, 2, 1, 3), "dp", "tp", None, None)
+    vv = hint(v.transpose(0, 2, 1, 3), "dp", "tp", None, None)
+
+    o = attention_core(qg, kk, vv, causal=True, window=None,
+                       scale=(nd + rd) ** -0.5, kv_len=kv_len, qpos=qpos,
+                       cfg=cfg)
+    o = hint(o[:, :, 0].transpose(0, 2, 1, 3).reshape(b, s, h * vd),
+             "dp", None, "tp")
+    return layers.dense(p["wo"], o), new_cache

@@ -1,0 +1,125 @@
+"""Hymba-style hybrid block: attention heads and mamba heads in parallel.
+
+Both mixers read the same normed input; their (individually normalized)
+outputs are averaged — the hymba fusion.  The mamba half is the scalar-decay
+SSD form (DESIGN.md hardware adaptation; state_size preserved), chunked for
+the MXU.  Decode carries (kv-cache for the attention half, ssm state for the
+mamba half).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers, ssm
+
+Params = dict
+
+
+def init_mamba_head_mixer(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    n = cfg.ssm.state_size
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "in_x": layers.init_dense(next(ks), d, d, dtype),
+        "in_z": layers.init_dense(next(ks), d, d, dtype),     # gate
+        "in_b": layers.init_dense(next(ks), d, h * n, dtype),
+        "in_c": layers.init_dense(next(ks), d, h * n, dtype),
+        "in_dt": layers.init_dense(next(ks), d, h, dtype),
+        "a_log": (jnp.zeros((h,)) - 0.5).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": layers.init_rmsnorm(d, dtype),
+        "wo": layers.init_dense(next(ks), d, d, dtype),
+    }
+
+
+def _ssd_inputs(p, x, cfg):
+    b = x.shape[0]
+    lead = x.shape[1:-1]
+    n = cfg.ssm.state_size
+    hd = cfg.ssm.head_dim
+    h = cfg.d_model // hd
+    xv = layers.dense(p["in_x"], x).reshape(b, *lead, h, hd)
+    z = jax.nn.silu(layers.dense(p["in_z"], x))
+    bk = layers.dense(p["in_b"], x).reshape(b, *lead, h, n)
+    ck = layers.dense(p["in_c"], x).reshape(b, *lead, h, n)
+    dt = jax.nn.softplus(
+        layers.dense(p["in_dt"], x).astype(jnp.float32) + p["dt_bias"])
+    log_a = -jnp.exp(p["a_log"]) * dt            # <= 0 per head per step
+    xv = xv * dt[..., None].astype(xv.dtype)     # dt premultiplied input
+    return xv, z, bk, ck, log_a
+
+
+def mamba_mixer(p, x, *, cfg: ModelConfig, state=None, return_state=False):
+    """x: [B, S, d] -> [B, S, d].  state: [B, H, n, hd]."""
+    b, s, d = x.shape
+    xv, z, bk, ck, log_a = _ssd_inputs(p, x, cfg)
+    y, new_state = ssm.ssd_chunked(xv, log_a, bk, ck,
+                                   chunk=cfg.ssm.chunk_size, state0=state,
+                                   return_state=True)
+    y = y.reshape(b, s, d)
+    y = layers.rmsnorm(p["out_norm"], y, eps=cfg.norm_eps) * z
+    y = layers.dense(p["wo"], y)
+    return (y, new_state) if return_state else y
+
+
+def mamba_mixer_step(p, x, *, cfg: ModelConfig, state):
+    """Single-token step.  x: [B, d]; state [B, H, n, hd]."""
+    b, d = x.shape
+    xv, z, bk, ck, log_a = _ssd_inputs(p, x, cfg)
+    y, new_state = ssm.ssd_step(state, xv, log_a, bk, ck)
+    y = y.reshape(b, d)
+    y = layers.rmsnorm(p["out_norm"], y, eps=cfg.norm_eps) * z
+    return layers.dense(p["wo"], y), new_state
+
+
+def init_hybrid_block(key, cfg: ModelConfig, dtype, tp: int = 1) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln_in": layers.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_mod.init_attention(ks[0], cfg, dtype, tp),
+        "mamba": init_mamba_head_mixer(ks[1], cfg, dtype),
+        "ln_mlp": layers.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                               act=cfg.act),
+        "norm_a": layers.init_rmsnorm(cfg.d_model, dtype),
+        "norm_m": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def hybrid_block(p, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
+                 cache: dict | None = None, cache_pos=None,
+                 ring_valid=None):
+    """Parallel attn ‖ mamba + MLP.  Returns (x, new_cache)."""
+    single = x.ndim == 2
+    xin = x[:, None] if single else x                # promote decode to S=1
+    h = layers.rmsnorm(p["ln_in"], xin, eps=cfg.norm_eps)
+
+    attn_cache = None if cache is None else cache["attn"]
+    ssm_state = None if cache is None else cache["ssm"]
+    a, new_attn = attn_mod.attention(
+        p["attn"], h, cos, sin, cfg=cfg, tp=tp, causal=True,
+        cache=attn_cache, cache_pos=cache_pos, ring_valid=ring_valid)
+    if single:
+        m, new_ssm = mamba_mixer_step(p["mamba"], h[:, 0], cfg=cfg,
+                                      state=ssm_state)
+        m = m[:, None]
+    else:
+        m, new_ssm = mamba_mixer(p["mamba"], h, cfg=cfg, state=ssm_state,
+                                 return_state=True)
+    mix = 0.5 * (layers.rmsnorm(p["norm_a"], a, eps=cfg.norm_eps)
+                 + layers.rmsnorm(p["norm_m"], m, eps=cfg.norm_eps))
+    x1 = xin + mix
+    h2 = layers.rmsnorm(p["ln_mlp"], x1, eps=cfg.norm_eps)
+    out = x1 + layers.mlp(p["mlp"], h2, act=cfg.act)
+    if single:
+        out = out[:, 0]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": new_attn, "ssm": new_ssm}
+    return out, new_cache

@@ -1,0 +1,131 @@
+"""Shared model layers: norms, MLPs, embeddings, RoPE/M-RoPE.
+
+Pure-functional pytree style: ``init_*(key, ...) -> params`` plus
+``apply``-style functions.  No framework dependency; params are nested dicts
+so pjit sharding rules can be expressed as path-pattern -> PartitionSpec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softmax_api
+
+Params = dict
+
+
+def _dense_init(key, in_dim, out_dim, dtype, scale: float | None = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def init_dense(key, in_dim, out_dim, dtype, bias: bool = False,
+               scale: float | None = None) -> Params:
+    p = {"w": _dense_init(key, in_dim, out_dim, dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(dim, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * p["scale"].astype(x.dtype)
+
+
+def init_mlp(key, d_model, d_ff, dtype, act: str = "silu") -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], d_model, d_ff, dtype),
+         "down": init_dense(ks[1], d_ff, d_model, dtype)}
+    if act == "silu":                      # SwiGLU needs the gate branch
+        p["gate"] = init_dense(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    up = dense(p["up"], x)
+    if act == "silu":
+        h = jax.nn.silu(dense(p["gate"], x)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return dense(p["down"], h)
+
+
+def init_embedding(key, vocab, d_model, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d_model))
+                      * d_model ** -0.5).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl).
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                 sections: tuple[int, ...] | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables.
+
+    positions: [..., S] int32 (plain RoPE) or [3, ..., S] (M-RoPE: temporal/
+    height/width streams).  With ``sections`` (half-dim split per stream,
+    sum = head_dim//2), each frequency band takes its angle from the stream
+    its section belongs to — qwen2-vl's M-RoPE.
+    Returns cos, sin of shape [..., S, head_dim//2] (f32).
+    """
+    inv = rope_freqs(head_dim, theta)
+    if sections is None:
+        ang = positions.astype(jnp.float32)[..., None] * inv
+        return jnp.cos(ang), jnp.sin(ang)
+    assert positions.ndim >= 2 and positions.shape[0] == len(sections)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # [3, ..., S, hd/2]
+    parts = []
+    start = 0
+    for s_idx, width in enumerate(sections):
+        parts.append(ang[s_idx, ..., start:start + width])
+        start += width
+    return jnp.cos(jnp.concatenate(parts, -1)), \
+        jnp.sin(jnp.concatenate(parts, -1))
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; cos/sin: [B, S, D/2] or [S, D/2] (broadcast over H).
+
+    Rotates pairs (x[..., :D/2], x[..., D/2:]) — the llama "rotate-half"
+    convention.
+    """
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def softmax_fn(cfg):
+    """The framework-wide softmax entry point bound to a model config."""
+    def f(scores, axis=-1):
+        return softmax_api.softmax(scores, axis=axis,
+                                   algorithm=cfg.softmax_algorithm,
+                                   use_kernel=cfg.use_kernels)
+    return f

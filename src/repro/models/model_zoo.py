@@ -1,0 +1,123 @@
+"""Model facade: build any assigned architecture from its config, plus
+``input_specs`` — ShapeDtypeStruct stand-ins for every (arch x shape) cell
+(the dry-run contract: weak-type-correct, shardable, no device allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import transformer
+from repro.serving import engine, kv_cache
+
+
+class Model:
+    """Thin stateless facade binding a config (+TP factor) to the pure fns."""
+
+    def __init__(self, cfg: ModelConfig, tp: int = 1):
+        self.cfg = cfg
+        self.tp = tp
+
+    # -- construction -------------------------------------------------------
+    def init(self, key):
+        return transformer.init_lm(key, self.cfg, self.tp)
+
+    def init_shape(self):
+        return jax.eval_shape(lambda k: self.init(k), jax.random.PRNGKey(0))
+
+    # -- functional entry points -------------------------------------------
+    def loss(self, params, batch, moe_impl: str = "dispatch"):
+        return transformer.train_loss(params, batch, cfg=self.cfg,
+                                      tp=self.tp, moe_impl=moe_impl)
+
+    def forward(self, params, tokens, **kw):
+        return transformer.forward(params, tokens, cfg=self.cfg, tp=self.tp,
+                                   **kw)
+
+    def prefill(self, params, tokens, **kw):
+        return engine.prefill(params, tokens, cfg=self.cfg, tp=self.tp, **kw)
+
+    def decode_step(self, params, cache, tokens, pos,
+                    moe_impl: str = "dispatch"):
+        return engine.decode_step(params, cache, tokens, pos, cfg=self.cfg,
+                                  tp=self.tp, moe_impl=moe_impl)
+
+    def init_cache(self, batch: int, max_len: int, ring: bool = True):
+        return kv_cache.init_cache(self.cfg, batch, max_len, self.tp,
+                                   ring=ring)
+
+    def generate(self, params, prompt, *, steps, key, **kw):
+        return engine.generate(params, prompt, cfg=self.cfg, steps=steps,
+                               key=key, tp=self.tp, **kw)
+
+
+def build_model(arch: str, tp: int = 1, reduced: bool = False,
+                **overrides) -> Model:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return Model(cfg, tp)
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins per (arch x shape) cell.
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, cell: ShapeCell | str, tp: int = 1) -> dict:
+    """Dry-run input shapes for one cell.  ``train``/``prefill`` describe the
+    step batch; ``decode`` describes (cache, tokens, pos)."""
+    if isinstance(cell, str):
+        cell = SHAPES[cell]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    if cell.kind == "train":
+        if cfg.family == "encdec":
+            return {"batch": {
+                "frames": sds((b, s, cfg.d_model), f32),
+                "dec_tokens": sds((b, cfg.dec_len), i32),
+            }}
+        batch = {"tokens": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["tokens"] = sds((b, s - cfg.n_patches), i32)
+            batch["patches"] = sds((b, cfg.n_patches, cfg.d_model), f32)
+        return {"batch": batch}
+
+    if cell.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"tokens": sds((b, cfg.dec_len), i32),
+                    "frames": sds((b, s, cfg.d_model), f32)}
+        spec = {"tokens": sds((b, s - cfg.n_patches), i32)}
+        if cfg.family == "vlm":
+            spec["patches"] = sds((b, cfg.n_patches, cfg.d_model), f32)
+        return spec
+
+    # decode: one new token against a cache of seq_len
+    cache = jax.eval_shape(
+        functools.partial(kv_cache.init_cache, cfg, b, s, tp))
+    return {
+        "cache": cache,
+        "tokens": sds((b,), i32),
+        "pos": sds((), i32),
+    }
+
+
+def cell_supported(cfg: ModelConfig, cell: ShapeCell | str) -> tuple[bool,
+                                                                     str]:
+    """Cell applicability per the assignment's skip rules."""
+    if isinstance(cell, str):
+        cell = SHAPES[cell]
+    if cell.name == "long_500k" and not cfg.sub_quadratic():
+        return False, ("needs sub-quadratic attention; " + cfg.name +
+                       " is pure full-attention (DESIGN SSArch-applicability)")
+    return True, ""

@@ -1,0 +1,197 @@
+"""Mixture-of-Experts layer (deepseek-v2-lite, granite-moe).
+
+The router is a softmax over experts — a paper-technique site: it routes
+through ``core.softmax_api`` (Alg 1/2/3 selectable).
+
+Two dispatch implementations, selectable per config (also a §Perf lever):
+
+  * ``dense``    — every expert computes every token, combine masked to
+                   top-k (MaxText-style "dropless dense").  Simple, exactly
+                   dropless, but E/k x overcompute.
+  * ``dispatch`` — GShard-style capacity-C one-hot dispatch/combine einsums.
+                   ~(capacity_factor) x active compute + dispatch matmuls;
+                   tokens beyond capacity are dropped (standard).
+
+Experts are stacked on a leading E axis so EP/TP sharding is a single
+PartitionSpec on that axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import softmax_api
+from repro.models import layers
+
+Params = dict
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    e = m.n_experts
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e)) * scale
+                         ).astype(jnp.float32)},   # router kept f32 (std)
+        "wg": (jax.random.normal(ks[1], (e, d, m.d_expert)) * scale
+               ).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (e, d, m.d_expert)) * scale
+               ).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (e, m.d_expert, d))
+               * m.d_expert ** -0.5).astype(dtype),
+    }
+    if m.n_shared:
+        p["shared"] = layers.init_mlp(ks[4], d, m.n_shared * m.d_expert,
+                                      dtype, act="silu")
+    return p
+
+
+def _router(p, x, cfg: ModelConfig):
+    """Top-k routing probabilities.  x: [B, S, d] -> (weights, idx) [B,S,k]."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ p["router"]["w"]
+    probs = softmax_api.softmax(logits, axis=-1,
+                                algorithm=cfg.softmax_algorithm)
+    w, idx = jax.lax.top_k(probs, m.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)        # renormalize top-k
+    return w.astype(x.dtype), idx, probs
+
+
+def _experts_all(p, x):
+    """All-experts FFN: x [.., T, d] -> [.., E, T, d]."""
+    h = jax.nn.silu(jnp.einsum("btd,edf->ebtf", x, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("btd,edf->ebtf", x, p["wu"].astype(x.dtype))
+    return jnp.einsum("ebtf,efd->ebtd", h, p["wd"].astype(x.dtype))
+
+
+def moe_dense(p, x, cfg: ModelConfig):
+    """Dropless dense path: compute all experts, mask-combine top-k."""
+    m = cfg.moe
+    w, idx, _ = _router(p, x, cfg)
+    y_all = _experts_all(p, x)                        # [E, B, S, d]
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=x.dtype)  # [B,S,k,E]
+    combine = jnp.einsum("bske,bsk->ebs", onehot, w)
+    return jnp.einsum("ebs,ebsd->bsd", combine, y_all)
+
+
+def moe_dispatch(p, x, cfg: ModelConfig, capacity_factor: float = 1.25,
+                 group_size: int = 2048):
+    """GShard capacity dispatch: one-hot dispatch/combine einsums.
+
+    Tokens are grouped (batch rows x ``group_size`` sequence slices) before
+    dispatch: the one-hot dispatch tensor is O(tokens x E x C) with
+    C = group x k x slack / E, so group size bounds both capacity memory and
+    the dispatch-matmul overcompute (GShard's standard group discipline).
+    """
+    m = cfg.moe
+    b0, s0, d = x.shape
+    g = min(group_size, s0)
+    if s0 % g == 0 and s0 > g:
+        x = x.reshape(b0 * (s0 // g), g, d)
+    b, s, _ = x.shape
+    cap = max(1, int(s * m.top_k * capacity_factor / m.n_experts))
+    w, idx, _ = _router(p, x, cfg)                    # [B, S, k]
+
+    # Position of each (token, k) within its expert queue.
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)  # [B,S,k,E]
+    flat = onehot.reshape(b, s * m.top_k, m.n_experts)
+    pos = jnp.cumsum(flat, axis=1) - 1                # [B, S*k, E]
+    pos = (pos * flat).sum(-1).reshape(b, s, m.top_k)  # queue slot per (t,k)
+    within = pos < cap
+    slot_oh = jax.nn.one_hot(jnp.where(within, pos, cap), cap + 1,
+                             dtype=x.dtype)[..., :cap]          # [B,S,k,C]
+    # dispatch[b, s, e, c] = 1 iff token s goes to expert e slot c
+    disp = jnp.einsum("bske,bskc->bsec", onehot.astype(x.dtype), slot_oh)
+    xe = jnp.einsum("bsec,bsd->ebcd", disp, x)        # [E, B, C, d]
+
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("ebcd,edf->ebcf", xe, p["wu"].astype(x.dtype))
+    ye = jnp.einsum("ebcf,efd->ebcd", h, p["wd"].astype(x.dtype))
+
+    comb = jnp.einsum("bsec,bsk,bske->bsec", disp, w,
+                      onehot.astype(x.dtype))
+    y = jnp.einsum("bsec,ebcd->bsd", comb, ye)
+    return y.reshape(b0, s0, d)
+
+
+def moe_gather(p, x, cfg: ModelConfig, capacity_factor: float = 1.25,
+               group_size: int = 2048):
+    """Gather/scatter capacity dispatch (beyond-paper §Perf lever).
+
+    The GShard one-hot dispatch/combine einsums cost 4·T·E·C·d FLOPs — for
+    small-expert configs (granite-moe: d_expert=512) that is ~80x the expert
+    compute itself.  Here the dispatch is an integer scatter building an
+    (E·C)-slot token-index table + a batched GATHER (zero FLOPs, memory-op);
+    combine is a gather of each token's k expert outputs.  Same capacity/drop
+    semantics as :func:`moe_dispatch`.
+    """
+    m = cfg.moe
+    b0, s0, d = x.shape
+    g = min(group_size, s0)
+    if s0 % g == 0 and s0 > g:
+        x = x.reshape(b0 * (s0 // g), g, d)
+    b, s, _ = x.shape
+    cap = max(1, int(s * m.top_k * capacity_factor / m.n_experts))
+    w, idx, _ = _router(p, x, cfg)                    # [B, S, k]
+
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)
+    flat = onehot.reshape(b, s * m.top_k, m.n_experts)
+    pos = ((jnp.cumsum(flat, axis=1) - 1) * flat).sum(-1)      # [B, S*k]
+    pos = pos.reshape(b, s, m.top_k)
+    within = pos < cap
+    slot = jnp.where(within, idx * cap + pos, m.n_experts * cap)  # drop slot
+
+    # token-index table per slot (+1 so 0 = empty), scatter with drop mode
+    binds = jnp.arange(b)[:, None]
+    tok_ids = jnp.broadcast_to(jnp.arange(s)[:, None] + 1,
+                               (s, m.top_k)).reshape(-1)
+    table = jnp.zeros((b, m.n_experts * cap + 1), jnp.int32)
+    table = table.at[binds, slot.reshape(b, -1)].set(
+        tok_ids[None, :], mode="drop")
+    table = table[:, :-1]                              # strip drop slot
+
+    # dispatch: batched gather (memory op, ~0 flops)
+    xe = jnp.take_along_axis(
+        x, jnp.maximum(table - 1, 0)[..., None], axis=1)
+    xe = xe * (table > 0)[..., None].astype(x.dtype)   # zero empty slots
+    xe = xe.reshape(b, m.n_experts, cap, d).transpose(1, 0, 2, 3)
+
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("ebcd,edf->ebcf", xe, p["wu"].astype(x.dtype))
+    ye = jnp.einsum("ebcf,efd->ebcd", h, p["wd"].astype(x.dtype))
+    ye_flat = ye.transpose(1, 0, 2, 3).reshape(b, m.n_experts * cap, d)
+
+    # combine: gather each token's k expert outputs, weight, sum
+    safe_slot = jnp.where(within, slot, 0).reshape(b, -1)
+    yk = jnp.take_along_axis(ye_flat, safe_slot[..., None], axis=1)
+    yk = yk.reshape(b, s, m.top_k, d)
+    yk = yk * (within[..., None].astype(x.dtype)) * w[..., None]
+    y = yk.sum(axis=2)
+    return y.reshape(b0, s0, d)
+
+
+_MOE_IMPLS = {"dense": moe_dense, "dispatch": moe_dispatch,
+              "gather": moe_gather}
+
+
+def moe_apply(p, x, cfg: ModelConfig, impl: str = "dispatch") -> jax.Array:
+    m = cfg.moe
+    y = _MOE_IMPLS[impl](p, x, cfg)
+    if m.n_shared:
+        y = y + layers.mlp(p["shared"], x, act="silu")
+    return y
+
+
+def aux_load_balance_loss(p, x, cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean over batch)."""
+    m = cfg.moe
+    _, idx, probs = _router(p, x, cfg)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], m.n_experts, dtype=jnp.float32),
+        axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return m.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,159 @@
+"""RWKV6 "Finch" block: data-dependent-decay time-mix + channel-mix.
+
+Attention-free — the paper's softmax technique is inapplicable to this mixer
+(DESIGN.md SSArch-applicability); it still applies to the LM head/sampler.
+The WKV core is the chunked per-channel-decay recurrence in
+``models/ssm.wkv6_chunked``; decode uses the exact single-step form with a
+carried (state, last-token) pair.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, ssm
+
+Params = dict
+
+_MIX_KEYS = ("r", "k", "v", "w", "g")
+_W_LORA = 64
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = cfg.ssm.head_dim
+    assert h * hd == d, (h, hd, d)
+    ks = iter(jax.random.split(key, 16))
+    p: Params = {
+        "ln_t": layers.init_rmsnorm(d, dtype),
+        "ln_c": layers.init_rmsnorm(d, dtype),
+        # token-shift interpolation weights per projection stream
+        "mu": {k: (jnp.full((d,), 0.5, dtype)) for k in _MIX_KEYS},
+        "wr": layers.init_dense(next(ks), d, d, dtype),
+        "wk": layers.init_dense(next(ks), d, d, dtype),
+        "wv": layers.init_dense(next(ks), d, d, dtype),
+        "wg": layers.init_dense(next(ks), d, d, dtype),
+        # data-dependent decay LoRA: log w = -exp(w0 + tanh(x @ a) @ b)
+        "w0": (jax.random.normal(next(ks), (d,)) * 0.1 - 0.6).astype(dtype),
+        "wa": layers.init_dense(next(ks), d, _W_LORA, dtype),
+        "wb": layers.init_dense(next(ks), _W_LORA, d, dtype,
+                                scale=0.01),
+        "u": (jax.random.normal(next(ks), (h, hd)) * 0.1).astype(dtype),
+        "wo": layers.init_dense(next(ks), d, d, dtype),
+        "out_norm": layers.init_rmsnorm(d, dtype),
+        # channel-mix
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "ck": layers.init_dense(next(ks), d, cfg.d_ff, dtype),
+        "cv": layers.init_dense(next(ks), cfg.d_ff, d, dtype),
+        "cr": layers.init_dense(next(ks), d, d, dtype),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """Previous-token stream: shift right by one; position 0 sees ``last``
+    (zeros at sequence start, carried state in decode)."""
+    prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    if last is not None:
+        prev = prev.at[:, 0].set(last)
+    return prev
+
+
+def _mix(x, prev, mu):
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def _decay_log(p, xw: jax.Array) -> jax.Array:
+    """log w in (-inf, 0): -exp(w0 + tanh(x a) b) — rwkv6 LoRA decay."""
+    lora = layers.dense(p["wb"], jnp.tanh(layers.dense(p["wa"], xw)))
+    return -jnp.exp((p["w0"].astype(xw.dtype) + lora).astype(jnp.float32))
+
+
+def time_mix(p, x, *, cfg: ModelConfig, state=None, last=None,
+             return_state=False):
+    """WKV6 time-mix.  x: [B, S, d].  state: [B, H, hd, hd]; last: [B, d]."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.ssm.head_dim
+    prev = _token_shift(x, last)
+    xs = {k: _mix(x, prev, p["mu"][k]) for k in _MIX_KEYS}
+    r = layers.dense(p["wr"], xs["r"]).reshape(b, s, h, hd)
+    k = layers.dense(p["wk"], xs["k"]).reshape(b, s, h, hd)
+    v = layers.dense(p["wv"], xs["v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(layers.dense(p["wg"], xs["g"]))
+    log_w = _decay_log(p, xs["w"]).reshape(b, s, h, hd)
+
+    u = p["u"].astype(jnp.float32)
+    out, new_state = ssm.wkv6_chunked(r, k, v, log_w, u,
+                                      chunk=cfg.ssm.chunk_size,
+                                      state0=state, return_state=True)
+    out = out.reshape(b, s, d)
+    out = layers.rmsnorm(p["out_norm"], out, eps=cfg.norm_eps) * g
+    out = layers.dense(p["wo"], out)
+    if return_state:
+        return out, new_state, x[:, -1]
+    return out
+
+
+def time_mix_step(p, x, *, cfg: ModelConfig, state, last):
+    """Single-token decode step.  x: [B, d].  Returns (out, state, last)."""
+    b, d = x.shape
+    h, hd = cfg.n_heads, cfg.ssm.head_dim
+    xs = {k: _mix(x, last, p["mu"][k]) for k in _MIX_KEYS}
+    r = layers.dense(p["wr"], xs["r"]).reshape(b, h, hd)
+    k = layers.dense(p["wk"], xs["k"]).reshape(b, h, hd)
+    v = layers.dense(p["wv"], xs["v"]).reshape(b, h, hd)
+    g = jax.nn.silu(layers.dense(p["wg"], xs["g"]))
+    log_w = _decay_log(p, xs["w"]).reshape(b, h, hd)
+    y, new_state = ssm.wkv6_step(state, r, k, v, log_w,
+                                 p["u"].astype(jnp.float32))
+    y = y.reshape(b, d)
+    y = layers.rmsnorm(p["out_norm"], y, eps=cfg.norm_eps) * g
+    return layers.dense(p["wo"], y), new_state, x
+
+
+def channel_mix(p, x, *, last=None, return_last=False):
+    """RWKV channel-mix (squared-relu FFN with token-shift gating)."""
+    prev = _token_shift(x, last) if x.ndim == 3 else last
+    xk = _mix(x, prev, p["mu_ck"])
+    xr = _mix(x, prev, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu(layers.dense(p["ck"], xk)))
+    y = jax.nn.sigmoid(layers.dense(p["cr"], xr)) * layers.dense(p["cv"], kk)
+    if return_last:
+        return y, (x[:, -1] if x.ndim == 3 else x)
+    return y
+
+
+def rwkv_block(p, x, *, cfg: ModelConfig, state=None, return_state=False):
+    """Full block: x + time_mix(ln(x)); x + channel_mix(ln(x)).
+
+    ``state``: dict(wkv [B,H,hd,hd], last_t [B,d], last_c [B,d]) or None.
+    """
+    if x.ndim == 2:                                  # decode single token
+        h = layers.rmsnorm(p["ln_t"], x, eps=cfg.norm_eps)
+        t, wkv, last_t = time_mix_step(p, h, cfg=cfg, state=state["wkv"],
+                                       last=state["last_t"])
+        x = x + t
+        hc = layers.rmsnorm(p["ln_c"], x, eps=cfg.norm_eps)
+        cmix = channel_mix(p, hc, last=state["last_c"])
+        return x + cmix, {"wkv": wkv, "last_t": last_t, "last_c": hc}
+
+    h = layers.rmsnorm(p["ln_t"], x, eps=cfg.norm_eps)
+    if return_state:
+        t, wkv, last_t = time_mix(p, h, cfg=cfg,
+                                  state=None if state is None
+                                  else state["wkv"],
+                                  last=None if state is None
+                                  else state["last_t"],
+                                  return_state=True)
+    else:
+        t = time_mix(p, h, cfg=cfg)
+    x = x + t
+    hc = layers.rmsnorm(p["ln_c"], x, eps=cfg.norm_eps)
+    if return_state:
+        cmix, last_c = channel_mix(p, hc, return_last=True)
+        return x + cmix, {"wkv": wkv, "last_t": last_t, "last_c": last_c}
+    return x + channel_mix(p, hc)

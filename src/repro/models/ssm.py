@@ -1,0 +1,229 @@
+"""Linear-recurrence mixers: mamba2-style SSD (hymba) and RWKV6 (Finch).
+
+TPU adaptation (DESIGN.md): both are computed in *chunked* form — intra-chunk
+contributions as dense matmuls (MXU), inter-chunk state carried through the
+chunk loop.  All decay factors are applied as ``exp(log-decay deltas) <= 1``
+so the math is overflow-free by construction — the same "never scale up"
+discipline as the paper's (m, n) algebra.
+
+Chunk-loop lowering policy (cost-analysis truthfulness vs HLO size):
+  * up to MAX_CHUNKS chunks: Python-unrolled (XLA counts every chunk).
+  * longer sequences: chunk size is capped (the RWKV6 intra tensor is
+    O(c^2 * dk)), so the loop becomes a ``lax.scan`` — XLA then counts ONE
+    chunk; the roofline harness adds the analytic correction
+    (:func:`scan_flops_correction`).  See EXPERIMENTS.md methodology.
+
+ * mamba2-style SSD: scalar decay per head per step (state [H, dk, dv]).
+ * RWKV6: data-dependent *per-channel* decay (state [H, dk, dv]), token-shift
+   mixing, u-bonus on the diagonal.
+Decode uses the exact recurrent single-step form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+MAX_CHUNKS = 32          # unrolled-loop bound (HLO size / SPMD time)
+SSD_CHUNK_CAP = 1024     # intra tensor is O(c^2 * H): cheap
+WKV_CHUNK_CAP = 256      # intra tensor is O(c^2 * H * dk): expensive
+
+
+def _plan(s: int, chunk: int, cap: int):
+    """Returns (chunk, n_chunks, use_scan)."""
+    chunk = min(max(chunk, -(-s // MAX_CHUNKS)), cap)
+    n = -(-s // chunk)
+    return chunk, n, n > MAX_CHUNKS
+
+
+# ---------------------------------------------------------------------------
+# Chunked scalar-decay SSD (mamba2-style).  Everything is [B, S, H, ...].
+# ---------------------------------------------------------------------------
+def _ssd_chunk(state, xvc, lac, bc, cc):
+    """One chunk: returns (new_state, y_chunk).  All f32."""
+    c = xvc.shape[1]
+    la_cum = jnp.cumsum(lac, axis=1)               # [B, c, H]
+    # Inter-chunk: contribution of the carried state to every position.
+    y_state = jnp.einsum("bch,bchk,bhkv->bchv", jnp.exp(la_cum), cc, state)
+    # Intra-chunk: D_ij = exp(LA_i - LA_j) for j <= i (<= 1, safe).
+    delta = la_cum[:, :, None, :] - la_cum[:, None, :, :]  # [B,c,c,H]
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32))
+    d = jnp.exp(jnp.minimum(delta, 0.0)) * tri[None, :, :, None]
+    scores = jnp.einsum("bchk,bjhk->bcjh", cc, bc) * d
+    y_intra = jnp.einsum("bcjh,bjhv->bchv", scores, xvc)
+    # State to next chunk: h_C = exp(LA_C) h_0 + sum_j exp(LA_C - LA_j) b x
+    w_all = jnp.exp(la_cum[:, -1:, :] - la_cum)    # [B, c, H] (<= 1)
+    state = (jnp.exp(la_cum[:, -1])[:, :, None, None] * state
+             + jnp.einsum("bch,bchk,bchv->bhkv", w_all, bc, xvc))
+    return state, y_state + y_intra
+
+
+def ssd_chunked(xv: jax.Array, log_a: jax.Array, bk: jax.Array,
+                ck: jax.Array, chunk: int,
+                state0: jax.Array | None = None,
+                return_state: bool = False):
+    """y_t = c_t^T h_t,  h_t = exp(log_a_t) * h_{t-1} + b_t xv_t^T.
+
+    xv:    [B, S, H, dv]   (input values, dt premultiplied)
+    log_a: [B, S, H]       (<= 0; per-head scalar log decay)
+    bk,ck: [B, S, H, dk]   (input/output projections a.k.a. B, C)
+    Returns y: [B, S, H, dv] (+ final state [B, H, dk, dv]).
+    """
+    b, s, h, dv = xv.shape
+    dk = bk.shape[-1]
+    chunk, nchunks, use_scan = _plan(s, chunk, SSD_CHUNK_CAP)
+    state = (jnp.zeros((b, h, dk, dv), jnp.float32) if state0 is None
+             else state0.astype(jnp.float32))
+
+    if use_scan:
+        assert s % chunk == 0, (s, chunk)
+
+        def resh(t):
+            return t.astype(jnp.float32).reshape(
+                b, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        def body(st, xs):
+            xvc, lac, bc, cc = xs
+            st, y = _ssd_chunk(st, xvc, lac, bc, cc)
+            return st, y
+
+        state, ys = jax.lax.scan(
+            body, state, (resh(xv), resh(log_a), resh(bk), resh(ck)))
+        y = ys.swapaxes(0, 1).reshape(b, s, h, dv).astype(xv.dtype)
+        return (y, state) if return_state else y
+
+    ys = []
+    for ci in range(nchunks):
+        sl = slice(ci * chunk, min(s, (ci + 1) * chunk))
+        state, y = _ssd_chunk(
+            state, xv[:, sl].astype(jnp.float32),
+            log_a[:, sl].astype(jnp.float32),
+            bk[:, sl].astype(jnp.float32), ck[:, sl].astype(jnp.float32))
+        ys.append(y.astype(xv.dtype))
+    y = jnp.concatenate(ys, axis=1)
+    return (y, state) if return_state else y
+
+
+def ssd_step(state, xv, log_a, bk, ck):
+    """Single-token recurrent step.  state: [B,H,dk,dv]; others [B,H,...]."""
+    state = (jnp.exp(log_a.astype(jnp.float32))[:, :, None, None] * state
+             + jnp.einsum("bhk,bhv->bhkv", bk.astype(jnp.float32),
+                          xv.astype(jnp.float32)))
+    y = jnp.einsum("bhk,bhkv->bhv", ck.astype(jnp.float32), state)
+    return y.astype(xv.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Chunked per-channel-decay WKV6 (RWKV "Finch").
+# ---------------------------------------------------------------------------
+def _wkv6_chunk(state, rc, kc, vc, lw, u):
+    """One chunk: returns (new_state, out_chunk).  All f32."""
+    c = rc.shape[1]
+    lw_cum = jnp.cumsum(lw, axis=1)                # [B, c, H, dk]
+    # State contribution ("decay-then-read" ordering, matches wkv6_step).
+    y_state = jnp.einsum("bchk,bhkv->bchv", rc * jnp.exp(lw_cum), state)
+    # Intra-chunk: j < i with decay prod_{s in (j, i]} w_s (per channel),
+    # plus the u-bonus diagonal (j == i).
+    delta = lw_cum[:, :, None] - lw_cum[:, None]   # [B, c, c, H, dk]
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+    dmat = jnp.exp(jnp.minimum(delta, 0.0)) * tri[None, :, :, None, None]
+    scores = jnp.einsum("bchk,bcjhk,bjhk->bcjh", rc, dmat, kc)
+    diag = jnp.einsum("bchk,hk,bchk->bch", rc, u, kc)
+    y_intra = jnp.einsum("bcjh,bjhv->bchv", scores, vc) + diag[..., None] * vc
+    # Carry: S_C = diag(exp(LW_C)) S_0 + sum_j diag(exp(LW_C - LW_j)) k v^T
+    w_tail = jnp.exp(lw_cum[:, -1:] - lw_cum)      # [B, c, H, dk]
+    state = (jnp.exp(lw_cum[:, -1])[..., None] * state
+             + jnp.einsum("bchk,bchv->bhkv", kc * w_tail, vc))
+    return state, y_state + y_intra
+
+
+def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array,
+                 log_w: jax.Array, u: jax.Array, chunk: int,
+                 state0: jax.Array | None = None,
+                 return_state: bool = False):
+    """out_t = r_t^T (diag(u) k_t v_t^T + S_{t-1});
+       S_t = diag(exp(log_w_t)) S_{t-1} + k_t v_t^T.
+
+    r,k:   [B, S, H, dk];  v: [B, S, H, dv]
+    log_w: [B, S, H, dk]   (<= 0, data-dependent per-channel decay)
+    u:     [H, dk]         (bonus for the current token)
+    """
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    chunk, nchunks, use_scan = _plan(s, chunk, WKV_CHUNK_CAP)
+    state = (jnp.zeros((b, h, dk, dv), jnp.float32) if state0 is None
+             else state0.astype(jnp.float32))
+
+    if use_scan:
+        assert s % chunk == 0, (s, chunk)
+
+        def resh(t):
+            return t.astype(jnp.float32).reshape(
+                b, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        def body(st, xs):
+            rc, kc, vc, lw = xs
+            st, y = _wkv6_chunk(st, rc, kc, vc, lw, u)
+            return st, y
+
+        state, ys = jax.lax.scan(
+            body, state, (resh(r), resh(k), resh(v), resh(log_w)))
+        out = ys.swapaxes(0, 1).reshape(b, s, h, dv).astype(r.dtype)
+        return (out, state) if return_state else out
+
+    outs = []
+    for ci in range(nchunks):
+        sl = slice(ci * chunk, min(s, (ci + 1) * chunk))
+        state, y = _wkv6_chunk(
+            state, r[:, sl].astype(jnp.float32),
+            k[:, sl].astype(jnp.float32), v[:, sl].astype(jnp.float32),
+            log_w[:, sl].astype(jnp.float32), u)
+        outs.append(y.astype(r.dtype))
+    out = jnp.concatenate(outs, axis=1)
+    return (out, state) if return_state else out
+
+
+def wkv6_step(state, r, k, v, log_w, u):
+    """Single-token WKV6 step.  state [B,H,dk,dv]; r/k/v/log_w [B,H,d*]."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(log_w.astype(jnp.float32))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, u[None, :, :, None] * kv
+                   + w[..., None] * state)
+    state = w[..., None] * state + kv
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Analytic flop accounting for the scan path (roofline correction).
+# ---------------------------------------------------------------------------
+def chunk_plan(kind: str, s: int, chunk: int):
+    cap = WKV_CHUNK_CAP if kind == "rwkv6" else SSD_CHUNK_CAP
+    return _plan(s, chunk, cap)
+
+
+def scan_flops_correction(kind: str, b: int, s: int, h: int, dk: int,
+                          dv: int, chunk: int) -> float:
+    """Extra FLOPs cost_analysis misses when the chunk loop is a scan:
+    (n_chunks - 1) x per-chunk flops (the scan body is counted once).
+    Returns 0 when the loop is unrolled.  Per-chunk estimate counts the
+    dominant einsums at 2 flops/MAC (+1 exp each for decay tensors)."""
+    chunk, n, use_scan = chunk_plan(kind, s, chunk)
+    if not use_scan:
+        return 0.0
+    c = chunk
+    if kind == "rwkv6":
+        per = (b * c * c * h * dk * 3        # dmat build (sub, exp, mask)
+               + 2 * b * c * c * h * dk      # scores contraction
+               + 2 * b * c * c * h * dv      # apply to v
+               + 3 * 2 * b * c * h * dk * dv)  # state read/carry terms
+    else:
+        per = (b * c * c * h * 3             # scalar dmat
+               + 2 * b * c * c * h * dk      # B^T C scores
+               + 2 * b * c * c * h * dv      # apply to values
+               + 3 * 2 * b * c * h * dk * dv)
+    return float((n - 1) * per)

@@ -1,0 +1,361 @@
+"""Model assembly: decoder-only LM (dense/moe/hybrid/ssm/vlm) + whisper
+enc-dec, with scan-over-stacked-layers, remat, chunked fused LM-head loss,
+and exact decode paths with per-family caches.
+
+Design notes
+  * Layer params are stacked on a leading L axis (init via vmap) so the layer
+    loop is ONE ``lax.scan`` body: HLO stays small at 52 layers and the
+    sharding of every layer is identical.  (Roofline flop counts use the
+    separately-provided unrolled variant — see launch/costmodel.py.)
+  * The LM-head loss is the paper's fused two-pass cross-entropy: logsumexp
+    via (m, n) in one pass over the logits chunk; probabilities are never
+    materialized.  Token-chunked so the [T, V] logits tensor never exists in
+    full.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import twopass
+from repro.distributed.autoshard import hint
+from repro.models import attention as attn_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import layers, moe
+from repro.models import rwkv as rwkv_mod
+
+Params = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, tp: int = 1, cross: bool = False,
+               causal: bool = True) -> Params:
+    dt = _pdtype(cfg)
+    if cfg.family == "ssm":
+        return rwkv_mod.init_rwkv_block(key, cfg, dt)
+    if cfg.family == "hybrid":
+        return hybrid_mod.init_hybrid_block(key, cfg, dt, tp)
+    ks = jax.random.split(key, 5)
+    p: Params = {"ln1": layers.init_rmsnorm(cfg.d_model, dt)}
+    if cfg.mla is not None:
+        p["attn"] = attn_mod.init_mla(ks[0], cfg, dt, tp)
+    else:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dt, tp)
+    if cross:
+        p["ln_x"] = layers.init_rmsnorm(cfg.d_model, dt)
+        p["xattn"] = attn_mod.init_attention(ks[3], cfg, dt, tp)
+    p["ln2"] = layers.init_rmsnorm(cfg.d_model, dt)
+    if cfg.family == "moe":
+        p["mlp"] = moe.init_moe(ks[1], cfg, dt)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt,
+                                   act=cfg.act)
+    return p
+
+
+def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
+                cache=None, cache_pos=None, enc=None, causal: bool = True,
+                moe_impl: str = "dispatch", ring_valid=None):
+    """One transformer block.  Returns (x, new_cache)."""
+    if cfg.family == "ssm":
+        if cache is None:
+            return rwkv_mod.rwkv_block(p, x, cfg=cfg), None
+        if x.ndim == 2:                          # decode step
+            return rwkv_mod.rwkv_block(p, x, cfg=cfg, state=cache)
+        return rwkv_mod.rwkv_block(p, x, cfg=cfg, state=cache,
+                                   return_state=True)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_block(p, x, cos, sin, cfg=cfg, tp=tp,
+                                       cache=cache, cache_pos=cache_pos,
+                                       ring_valid=ring_valid)
+
+    single = x.ndim == 2
+    xin = x[:, None] if single else x
+    h = layers.rmsnorm(p["ln1"], xin, eps=cfg.norm_eps)
+    if isinstance(cache, dict) and "cross" in cache:
+        self_cache = cache["self"]               # enc-dec decode cache
+    else:
+        self_cache = cache
+    if cfg.mla is not None:
+        a, new_self = attn_mod.mla_attention(p["attn"], h, cos, sin, cfg=cfg,
+                                             tp=tp, cache=self_cache,
+                                             cache_pos=cache_pos)
+    else:
+        a, new_self = attn_mod.attention(p["attn"], h, cos, sin, cfg=cfg,
+                                         tp=tp, causal=causal,
+                                         cache=self_cache,
+                                         cache_pos=cache_pos,
+                                         ring_valid=ring_valid)
+    x1 = xin + a
+    new_cache: Any = new_self
+    if "xattn" in p:
+        hx = layers.rmsnorm(p["ln_x"], x1, eps=cfg.norm_eps)
+        if enc is not None:                      # fresh cross-kv from encoder
+            xa, _ = attn_mod.attention(p["xattn"], hx, cos, sin, cfg=cfg,
+                                       tp=tp, causal=False, xkv=enc)
+        else:                                    # cached cross-kv (decode)
+            xa, _ = attn_mod.attention(
+                p["xattn"], hx, cos, sin, cfg=cfg, tp=tp, causal=False,
+                cache=cache["cross"], cache_pos=None, use_rope=False)
+        x1 = x1 + xa
+        if isinstance(cache, dict) and "cross" in cache:
+            new_cache = {"self": new_self, "cross": cache["cross"]}
+    h2 = layers.rmsnorm(p["ln2"], x1, eps=cfg.norm_eps)
+    if cfg.family == "moe":
+        f = moe.moe_apply(p["mlp"], h2, cfg, impl=moe_impl)
+    else:
+        f = layers.mlp(p["mlp"], h2, act=cfg.act)
+    out = x1 + f
+    if single:
+        out = out[:, 0]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# LM assembly.
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: ModelConfig, tp: int = 1) -> Params:
+    dt = _pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    vp = cfg.padded_vocab()
+    p: Params = {
+        "embed": layers.init_embedding(ks[0], vp, cfg.d_model, dt),
+        "norm_f": layers.init_rmsnorm(cfg.d_model, dt),
+    }
+    lkeys = jax.random.split(ks[1], cfg.n_layers)
+    p["blocks"] = jax.vmap(
+        lambda k: init_block(k, cfg, tp, cross=cfg.family == "encdec"))(
+            lkeys)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.init_dense(ks[2], cfg.d_model, vp, dt)
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(ks[3], cfg.n_enc_layers)
+        p["enc_blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, tp, causal=False))(ekeys)
+        p["enc_norm"] = layers.init_rmsnorm(cfg.d_model, dt)
+    if cfg.family == "vlm":
+        # patch-embedding projection applied to stubbed patch features
+        p["patch_proj"] = layers.init_dense(ks[4], cfg.d_model, cfg.d_model,
+                                            dt)
+    return p
+
+
+def _positions_for(cfg: ModelConfig, b: int, s: int, start=0):
+    """Position ids; M-RoPE 3-stream ids for vlm (vision grid then text)."""
+    if cfg.mrope_sections is None:
+        return jnp.arange(s) + start
+    npz = cfg.n_patches
+    grid = max(1, int(round(npz ** 0.5)))
+    idx = jnp.arange(s)
+    t_pos = jnp.where(idx < npz, 0, idx - npz + grid)
+    h_pos = jnp.where(idx < npz, idx // grid, idx - npz + grid)
+    w_pos = jnp.where(idx < npz, idx % grid, idx - npz + grid)
+    pos = jnp.stack([t_pos, h_pos, w_pos]) + start
+    return jnp.broadcast_to(pos[:, None, :], (3, b, s))
+
+
+def _cos_sin(cfg: ModelConfig, positions):
+    hd = cfg.resolved_head_dim()
+    if cfg.mla is not None:
+        hd = cfg.mla.qk_rope_head_dim
+    return layers.rope_cos_sin(positions, hd, cfg.rope_theta,
+                               sections=cfg.mrope_sections)
+
+
+def _segments(n_layers: int) -> tuple[int, int]:
+    """sqrt(L) checkpointing grouping: pick divisor pair (G, L/G) of L
+    minimizing G + L/G.  Saved activation carries drop from L to ~2*sqrt(L)
+    (one outer carry per segment + transient inner carries during one
+    segment's backward) at the cost of one extra forward — the standard
+    memory/compute trade at these batch sizes."""
+    best = (n_layers, 1)
+    for g in range(1, n_layers + 1):
+        if n_layers % g == 0:
+            if g + n_layers // g <= best[0] + best[1]:
+                best = (g, n_layers // g)
+    return best
+
+
+def _scan_blocks(p_blocks, x, cos, sin, *, cfg, tp, moe_impl="dispatch"):
+    """Layer loop (train/prefill, no cache): two-level checkpointed scan
+    over stacked params (sqrt(L) remat, see :func:`_segments`)."""
+    def body(h, pl):
+        h2, _ = block_apply(pl, h, cos, sin, cfg=cfg, tp=tp,
+                            moe_impl=moe_impl)
+        return h2, ()
+
+    if not cfg.scan_layers:
+        b2 = jax.checkpoint(body) if cfg.remat else body
+        for i in range(cfg.n_layers):
+            x, _ = b2(x, jax.tree.map(lambda t: t[i], p_blocks))
+        return x
+
+    if not cfg.remat:
+        x, _ = jax.lax.scan(body, x, p_blocks)
+        return x
+
+    g, seg = _segments(cfg.n_layers)
+
+    @jax.checkpoint
+    def seg_body(h, pseg):
+        # per-layer checkpoint INSIDE the segment too: segment backward then
+        # re-saves only layer inputs, never attention internals.
+        h2, _ = jax.lax.scan(jax.checkpoint(body), h, pseg)
+        return h2, ()
+
+    if g == 1 or seg == 1:
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, p_blocks)
+        return x
+    pg = jax.tree.map(lambda t: t.reshape(g, seg, *t.shape[1:]), p_blocks)
+    x, _ = jax.lax.scan(seg_body, x, pg)
+    return x
+
+
+def forward(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
+            patches=None, moe_impl: str = "dispatch"):
+    """Token (+stub-modality) forward to final hidden states [B, S, d]."""
+    b, s_tok = tokens.shape
+    dt = _dtype(cfg)
+    x = layers.embed(params["embed"], tokens, dt)
+    if cfg.family == "vlm" and patches is not None:
+        pe = layers.dense(params["patch_proj"], patches.astype(dt))
+        x = jnp.concatenate([pe, x], axis=1)
+    s = x.shape[1]
+    cos, sin = _cos_sin(cfg, _positions_for(cfg, b, s))
+    x = _scan_blocks(params["blocks"], x, cos, sin, cfg=cfg, tp=tp,
+                     moe_impl=moe_impl)
+    return layers.rmsnorm(params["norm_f"], x, eps=cfg.norm_eps)
+
+
+def encode(params: Params, frames, *, cfg: ModelConfig, tp: int = 1):
+    """Whisper encoder over stubbed frame embeddings [B, S_enc, d]."""
+    x = frames.astype(_dtype(cfg))
+    b, s = x.shape[:2]
+    cos, sin = _cos_sin(cfg, jnp.arange(s))
+
+    def body(h, pl):
+        h2, _ = block_apply(pl, h, cos, sin, cfg=cfg, tp=tp, causal=False)
+        return h2, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda t: t[i],
+                                        params["enc_blocks"]))
+    return layers.rmsnorm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def decode_with_encoder(params: Params, enc, dec_tokens, *,
+                        cfg: ModelConfig, tp: int = 1):
+    """Whisper decoder full-sequence pass (training)."""
+    b, s = dec_tokens.shape
+    x = layers.embed(params["embed"], dec_tokens, _dtype(cfg))
+    cos, sin = _cos_sin(cfg, jnp.arange(s))
+
+    def body(h, pl):
+        h2, _ = block_apply(pl, h, cos, sin, cfg=cfg, tp=tp, enc=enc)
+        return h2, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], params["blocks"]))
+    return layers.rmsnorm(params["norm_f"], x, eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Fused two-pass LM loss (token-chunked; [T, V] logits never materialized).
+# ---------------------------------------------------------------------------
+def _head_w(params: Params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def lm_loss_from_hidden(params: Params, h, labels, *, cfg: ModelConfig,
+                        n_chunks: int = 8, mask=None):
+    """mean CE over tokens.  h: [B, S, d]; labels: [B, S] (padded vocab ids
+    are never produced by data pipeline; padded logit columns are finite but
+    only reachable via labels, so they never contribute)."""
+    b, s, d = h.shape
+    w = _head_w(params, cfg).astype(h.dtype)
+    n_chunks = min(n_chunks, s)
+    c = -(-s // n_chunks)
+
+    @jax.checkpoint
+    def chunk_ce(hc, labc, w_):
+        """One sequence-chunk.  Logits live only inside this remat scope:
+        the backward RECOMPUTES them (the paper's pass-2 recompute
+        discipline) instead of saving [Tc, Vp]-sized ExtExp residuals.
+        Chunking runs along S so the batch dim keeps its DP sharding."""
+        hc = hint(hc, "dp", None, None)
+        tc = hc.shape[0] * hc.shape[1]
+        logits = (hc.reshape(tc, d) @ w_).astype(jnp.float32)
+        logits = hint(logits.reshape(hc.shape[0], hc.shape[1], -1),
+                      "dp", None, "tp").reshape(tc, -1)
+        lse = twopass.twopass_logsumexp(logits, axis=-1)   # one (m,n) pass
+        ll = jnp.take_along_axis(logits, labc.reshape(tc)[:, None],
+                                 axis=-1)[:, 0]
+        return (lse - ll).reshape(hc.shape[0], hc.shape[1])
+
+    total = jnp.float32(0.0)
+    count = jnp.float32(0.0)
+    for i in range(n_chunks):
+        sl = slice(i * c, min(s, (i + 1) * c))
+        if sl.start >= s:
+            continue
+        ce = chunk_ce(h[:, sl], labels[:, sl], w)
+        if mask is not None:
+            mk = mask[:, sl].astype(jnp.float32)
+            total += jnp.sum(ce * mk)
+            count += jnp.sum(mk)
+        else:
+            total += jnp.sum(ce)
+            count += ce.size
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_logits(params: Params, h, *, cfg: ModelConfig):
+    """Full logits for sampling/eval.  h: [..., d] -> [..., V_padded]."""
+    return h @ _head_w(params, cfg).astype(h.dtype)
+
+
+def train_loss(params: Params, batch: dict, *, cfg: ModelConfig,
+               tp: int = 1, moe_impl: str = "dispatch"):
+    """Next-token CE for every family (whisper: decoder CE given frames)."""
+    if cfg.family == "encdec":
+        enc = encode(params, batch["frames"], cfg=cfg, tp=tp)
+        hd = decode_with_encoder(params, enc, batch["dec_tokens"][:, :-1],
+                                 cfg=cfg, tp=tp)
+        return lm_loss_from_hidden(params, hd, batch["dec_tokens"][:, 1:],
+                                   cfg=cfg)
+    tokens = batch["tokens"]
+    patches = batch.get("patches")
+    h = forward(params, tokens[:, :-1], cfg=cfg, tp=tp, patches=patches,
+                moe_impl=moe_impl)
+    labels = batch["tokens"][:, 1:]
+    if cfg.family == "vlm" and patches is not None:
+        h = h[:, patches.shape[1]:]                 # loss on text tail only
+    return lm_loss_from_hidden(params, h, labels, cfg=cfg,
+                               mask=batch.get("mask"))

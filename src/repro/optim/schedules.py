@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float = 3e-4, warmup: int = 100,
+                  total: int = 10000, floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant(step, *, peak_lr: float = 3e-4, **_):
+    return jnp.full_like(step, peak_lr, dtype=jnp.float32)

@@ -1,0 +1,1 @@
+"""Serving: KV caches, prefill/decode steps, sampling, generation loop."""

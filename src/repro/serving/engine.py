@@ -1,0 +1,188 @@
+"""Serving: prefill + single-token decode steps for every family.
+
+``decode_step`` is the function the decode_* dry-run cells lower: one new
+token against a KV cache of ``seq_len``.  The layer loop is a ``lax.scan``
+over (stacked params, stacked cache).  Sampling uses the paper's two-pass
+softmax (the sampler is a softmax site).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import softmax_api, twopass
+from repro.models import layers, transformer
+from repro.serving import kv_cache
+
+Params = dict
+
+
+def _layer_loop(cfg: ModelConfig, body, x, xs):
+    """lax.scan over stacked layers, or an unrolled python loop when
+    ``cfg.scan_layers`` is False (cost-model variants need truthful
+    cost_analysis; scan bodies are counted once — see launch/lowering.py)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    n = cfg.n_layers
+    ys = []
+    for i in range(n):
+        x, y = body(x, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    return x, stacked
+
+
+def _cos_sin_at(cfg: ModelConfig, pos, batch: int):
+    """RoPE tables for a single (traced) position -> [B, 1, hd/2]."""
+    hd = cfg.resolved_head_dim()
+    if cfg.mla is not None:
+        hd = cfg.mla.qk_rope_head_dim
+    if cfg.mrope_sections is None:
+        positions = jnp.full((batch, 1), pos)
+    else:
+        # Text positions in M-RoPE: all three streams equal (past the stub
+        # vision prefix all ids advance together).
+        positions = jnp.full((3, batch, 1), pos)
+    return layers.rope_cos_sin(positions, hd, cfg.rope_theta,
+                               sections=cfg.mrope_sections)
+
+
+def decode_step(params: Params, cache, tokens, pos, *, cfg: ModelConfig,
+                tp: int = 1, moe_impl: str = "dispatch"):
+    """One decode step.  tokens: [B] int32; pos: traced scalar (cache fill).
+
+    Returns (logits [B, V_padded], new_cache).
+    """
+    b = tokens.shape[0]
+    x = layers.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))  # [B, d]
+    cos, sin = _cos_sin_at(cfg, pos, b)
+
+    cache_pos = None if cfg.family == "ssm" else pos
+    ring_valid = None
+    if cfg.swa_window is not None and cfg.family in ("dense", "moe", "vlm",
+                                                     "hybrid"):
+        # SWA ring cache: slot addressing mod the window-sized buffer; all
+        # written slots are in-window by construction (RoPE baked on write).
+        kbuf = cache["attn"]["k"] if cfg.family == "hybrid" else cache["k"]
+        alloc = kbuf.shape[2]
+        if alloc <= cfg.swa_window:              # ring-sized buffer
+            cache_pos = pos % alloc
+            ring_valid = jnp.minimum(pos + 1, alloc)
+
+    def body(h, xs):
+        pl, cl = xs
+        h2, new_c = transformer.block_apply(
+            pl, h, cos, sin, cfg=cfg, tp=tp, cache=cl, cache_pos=cache_pos,
+            ring_valid=ring_valid, moe_impl=moe_impl)
+        return h2, new_c
+
+    h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
+    h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
+    logits = transformer.lm_logits(params, h, cfg=cfg)
+    return logits, new_cache
+
+
+def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
+            max_len: int | None = None, patches=None, frames=None,
+            moe_impl: str = "dispatch"):
+    """Process the full prompt, return (last-token logits, filled cache).
+
+    For encdec: ``frames`` go through the encoder; cross-kv is computed once
+    and stored; ``tokens`` are the decoder prompt.
+    """
+    b, s = tokens.shape
+    total_s = s + (cfg.n_patches if (cfg.family == "vlm"
+                                     and patches is not None) else 0)
+    max_len = max(max_len or 0, total_s)
+    cache = kv_cache.init_cache(cfg, b, max_len, tp, ring=False)
+
+    if cfg.family == "encdec":
+        enc = transformer.encode(params, frames, cfg=cfg, tp=tp)
+        # Fill cross-kv caches layer by layer (stacked on L axis).
+        def fill(pl, cl):
+            k = layers.dense(pl["xattn"]["wk"], enc)
+            v = layers.dense(pl["xattn"]["wv"], enc)
+            hd = cfg.resolved_head_dim()
+            cl["cross"]["k"] = k.reshape(b, -1, cfg.n_kv_heads, hd).astype(
+                cl["cross"]["k"].dtype)
+            cl["cross"]["v"] = v.reshape(b, -1, cfg.n_kv_heads, hd).astype(
+                cl["cross"]["v"].dtype)
+            return cl
+
+        cache = jax.vmap(fill, in_axes=(0, 0))(params["blocks"], cache)
+        hd = transformer.decode_with_encoder(params, enc, tokens, cfg=cfg,
+                                             tp=tp)
+        logits = transformer.lm_logits(params, hd[:, -1], cfg=cfg)
+        return logits, cache
+
+    if cfg.family == "ssm":
+        x = layers.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+        def body(h, xs):
+            pl, cl = xs
+            h2, st = transformer.block_apply(pl, h, None, None, cfg=cfg,
+                                             tp=tp, cache=cl)
+            return h2, st
+
+        h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
+        h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
+        logits = transformer.lm_logits(params, h[:, -1], cfg=cfg)
+        return logits, new_cache
+
+    # dense / moe / hybrid / vlm: run blocks with cache write at pos 0..s.
+    x = layers.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and patches is not None:
+        pe = layers.dense(params["patch_proj"],
+                          patches.astype(jnp.dtype(cfg.dtype)))
+        x = jnp.concatenate([pe, x], axis=1)
+    s_all = x.shape[1]
+    cos, sin = transformer._cos_sin(
+        cfg, transformer._positions_for(cfg, b, s_all))
+
+    def body(h, xs):
+        pl, cl = xs
+        h2, new_c = transformer.block_apply(pl, h, cos, sin, cfg=cfg, tp=tp,
+                                            cache=cl, cache_pos=0,
+                                            moe_impl=moe_impl)
+        return h2, new_c
+
+    h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
+    h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
+    logits = transformer.lm_logits(params, h[:, -1], cfg=cfg)
+    return logits, new_cache
+
+
+def sample_token(logits, key, temperature: float = 1.0, *,
+                 cfg: ModelConfig | None = None, vocab: int | None = None):
+    """Temperature sampling through the Two-Pass softmax (sampler site)."""
+    v = vocab or logits.shape[-1]
+    logits = logits[..., :v].astype(jnp.float32)
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    probs = twopass.twopass_softmax(logits / temperature)
+    return jax.random.categorical(key, jnp.log(probs + 1e-30), axis=-1)
+
+
+def generate(params, prompt, *, cfg: ModelConfig, steps: int, key,
+             tp: int = 1, max_len: int | None = None,
+             temperature: float = 1.0, **prefill_kw):
+    """Greedy/temperature generation loop (host-side) — example/e2e driver."""
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    logits, cache = prefill(params, prompt, cfg=cfg, tp=tp, max_len=max_len,
+                            **prefill_kw)
+    toks = []
+    pos = s
+    step_fn = jax.jit(functools.partial(decode_step, cfg=cfg, tp=tp))
+    tok = sample_token(logits, key, temperature, vocab=cfg.vocab)
+    for i in range(steps):
+        toks.append(tok)
+        key, sub = jax.random.split(key)
+        logits, cache = step_fn(params, cache, tok, pos + i)
+        tok = sample_token(logits, sub, temperature, vocab=cfg.vocab)
+    toks.append(tok)
+    return jnp.stack(toks, axis=1)

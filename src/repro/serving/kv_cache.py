@@ -1,0 +1,84 @@
+"""Per-family KV/state cache construction and shape logic.
+
+Cache pytrees are stacked on a leading layer axis so the decode layer loop is
+one ``lax.scan`` (cache consumed as xs, new cache emitted as ys).  SWA archs
+allocate only ``window`` positions (ring addressing is a documented follow-up;
+here we allocate min(window_pad, max_len) and slide by recompute).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cache_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int = 1,
+               ring: bool = True):
+    """Returns the stacked-layer cache pytree for decode.  ``ring=True``
+    sizes SWA caches at the window (slot addressing mod window); prefill
+    paths pass ring=False for position addressing."""
+    dt = cache_dtype(cfg)
+    hd = cfg.resolved_head_dim()
+    ls = cfg.n_layers
+
+    if cfg.family == "ssm":
+        h = cfg.n_heads
+        shd = cfg.ssm.head_dim
+        return {
+            "wkv": jnp.zeros((ls, batch, h, shd, shd), jnp.float32),
+            "last_t": jnp.zeros((ls, batch, cfg.d_model), dt),
+            "last_c": jnp.zeros((ls, batch, cfg.d_model), dt),
+        }
+    if cfg.family == "hybrid":
+        h = cfg.d_model // cfg.ssm.head_dim
+        alloc = max_len
+        if cfg.swa_window is not None and ring:
+            alloc = min(max_len, cfg.swa_window)
+        return {
+            "attn": {
+                "k": jnp.zeros((ls, batch, alloc, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((ls, batch, alloc, cfg.n_kv_heads, hd), dt),
+            },
+            "ssm": jnp.zeros((ls, batch, h, cfg.ssm.state_size,
+                              cfg.ssm.head_dim), jnp.float32),
+        }
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c": jnp.zeros((ls, batch, max_len, m.kv_lora_rank), dt),
+            "kr": jnp.zeros((ls, batch, max_len, m.qk_rope_head_dim), dt),
+        }
+    if cfg.family == "encdec":
+        return {
+            "self": {
+                "k": jnp.zeros((ls, batch, cfg.dec_len, cfg.n_kv_heads, hd),
+                               dt),
+                "v": jnp.zeros((ls, batch, cfg.dec_len, cfg.n_kv_heads, hd),
+                               dt),
+            },
+            # cross-kv filled from encoder output at prefill
+            "cross": {
+                "k": jnp.zeros((ls, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((ls, batch, max_len, cfg.n_kv_heads, hd), dt),
+            },
+        }
+    # dense / moe / vlm
+    alloc = max_len
+    if cfg.swa_window is not None and ring:
+        alloc = min(max_len, cfg.swa_window)
+    return {
+        "k": jnp.zeros((ls, batch, alloc, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((ls, batch, alloc, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    import jax
+
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

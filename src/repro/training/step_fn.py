@@ -1,0 +1,63 @@
+"""The jit-compiled train step: loss -> grads -> clip -> (compress) -> AdamW.
+
+This is the function every ``train_*`` dry-run cell lowers.  Microbatch
+gradient accumulation (python-unrolled for truthful cost analysis) and
+gradient compression are config levers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression
+from repro.models.model_zoo import Model
+from repro.optim import adamw, schedules
+from repro.training.train_state import TrainState
+
+
+def make_train_step(model: Model, *, lr_schedule: Callable | None = None,
+                    microbatches: int = 1, grad_compression: str = "none",
+                    moe_impl: str = "dispatch",
+                    max_grad_norm: float | None = 1.0):
+    lr_fn = lr_schedule or functools.partial(schedules.warmup_cosine)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, moe_impl=moe_impl)
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches > 1:
+            # Python-unrolled accumulation (cost_analysis counts every pass).
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda x: x.reshape(microbatches, -1,
+                                        *x.shape[1:])[i], batch)
+
+            loss = jnp.float32(0)
+            grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            for i in range(microbatches):
+                li, gi = jax.value_and_grad(loss_fn)(state.params,
+                                                     slice_mb(i))
+                loss += li / microbatches
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    grads, gi)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+
+        if grad_compression == "bf16":
+            grads = compression.decompress_bf16(
+                compression.compress_bf16(grads))
+
+        lr = lr_fn(state.opt.step)
+        new_params, new_opt, metrics = adamw.update(
+            grads, state.opt, state.params, lr,
+            max_grad_norm=max_grad_norm)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

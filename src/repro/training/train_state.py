@@ -1,0 +1,28 @@
+"""Train state: params + AdamW moments + step, with sharding helpers."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_state(params) -> TrainState:
+    return TrainState(params, adamw.init(params))
+
+
+def state_specs(params_specs) -> TrainState:
+    """Moments share the param PartitionSpecs; step is replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    return TrainState(
+        params_specs,
+        adamw.AdamWState(P(), params_specs, params_specs),
+    )

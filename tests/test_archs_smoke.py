@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each assigned arch: instantiate the reduced config, run one forward /
+train step, assert output shapes and no NaNs.  Decode paths get a
+prefill+decode consistency check on representative families.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.model_zoo import cell_supported, input_specs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(model, key, batch=2, seq=17):
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.random.normal(key, (batch, seq, cfg.d_model)),
+            "dec_tokens": jax.random.randint(key, (batch, cfg.dec_len), 0,
+                                             cfg.vocab),
+        }
+    b = {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(key,
+                                         (batch, cfg.n_patches, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    """One loss+grad step on the reduced config: finite, right scale."""
+    m = build_model(arch, reduced=True)
+    params = m.init(KEY)
+    batch = _batch_for(m, jax.random.PRNGKey(1))
+    loss, grads = jax.value_and_grad(lambda p: m.loss(p, batch))(params)
+    assert np.isfinite(float(loss)), (arch, loss)
+    # CE at random init ~ ln(vocab) (vocab=256 reduced) give-or-take init.
+    assert 2.0 < float(loss) < 12.0, (arch, float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves, arch
+    assert not any(bool(jnp.isnan(x).any()) for x in leaves), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes(arch):
+    m = build_model(arch, reduced=True)
+    cfg = m.cfg
+    params = m.init(KEY)
+    if cfg.family == "encdec":
+        from repro.models import transformer
+
+        enc = transformer.encode(
+            params, jax.random.normal(KEY, (2, 16, cfg.d_model)), cfg=cfg)
+        assert enc.shape == (2, 16, cfg.d_model)
+        assert not bool(jnp.isnan(enc).any())
+        return
+    tokens = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["patches"] = jax.random.normal(KEY,
+                                          (2, cfg.n_patches, cfg.d_model))
+    h = m.forward(params, tokens, **kw)
+    exp_s = 12 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert h.shape == (2, exp_s, cfg.d_model)
+    assert not bool(jnp.isnan(h).any())
+
+
+@pytest.mark.parametrize("arch", ["granite-20b", "deepseek-v2-lite-16b",
+                                  "rwkv6-1.6b", "hymba-1.5b",
+                                  "h2o-danube-3-4b"])
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill must match a fresh full forward pass."""
+    m = build_model(arch, reduced=True)
+    cfg = m.cfg
+    params = m.init(KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 9), 0, cfg.vocab)
+    # full forward logits at last position.  MoE uses the dropless dense
+    # impl here: GShard capacity dispatch drops tokens differently between
+    # full-sequence and incremental passes (inherent, not a bug).
+    h = m.forward(params, toks, moe_impl="dense")
+    from repro.models import transformer
+
+    full_logits = transformer.lm_logits(params, h[:, -1], cfg=cfg)
+
+    logits, cache = m.prefill(params, toks[:, :-1], max_len=16,
+                              moe_impl="dense")
+    step_logits, _ = m.decode_step(params, cache, toks[:, -1],
+                                   jnp.int32(toks.shape[1] - 1),
+                                   moe_impl="dense")
+    np.testing.assert_allclose(np.asarray(step_logits[:, :cfg.vocab]),
+                               np.asarray(full_logits[:, :cfg.vocab]),
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_defined_for_all_cells(arch):
+    cfg = get_config(arch)
+    from repro.configs.base import SHAPES
+
+    for cell in SHAPES.values():
+        ok, why = cell_supported(cfg, cell)
+        if not ok:
+            assert cell.name == "long_500k", (arch, cell.name, why)
+            continue
+        specs = input_specs(cfg, cell, tp=16)
+        assert specs, (arch, cell.name)
+
+
+def test_head_padding_is_exact():
+    """hymba 25->32 padded q-heads: padded out-proj rows are zero, so logits
+    must be invariant to garbage in padded wq slices."""
+    m = build_model("hymba-1.5b", reduced=True, n_heads=5, n_kv_heads=5)
+    mp = build_model("hymba-1.5b", reduced=True, n_heads=5, n_kv_heads=5)
+    mp.tp = 4                                   # pads 5 -> 8 q-heads
+    params = m.init(KEY)
+    params_p = mp.init(KEY)
+    toks = jax.random.randint(KEY, (2, 8), 0, m.cfg.vocab)
+    # Same seed gives different tensor shapes; instead check: padded model's
+    # output is unchanged when padded head weights are randomized.
+    h1 = mp.forward(params_p, toks)
+    noisy = jax.tree.map(lambda x: x, params_p)
+    wq = noisy["blocks"]["attn"]["wq"]["w"]
+    hd = mp.cfg.resolved_head_dim()
+    real = mp.cfg.n_heads * hd
+    noise = jax.random.normal(KEY, wq[..., real:].shape, wq.dtype)
+    noisy["blocks"]["attn"]["wq"]["w"] = wq.at[..., real:].set(noise)
+    h2 = mp.forward(noisy, toks)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), atol=1e-5)
+
+
+def test_vocab_padding_unreachable():
+    """Labels never index padded vocab; sampling is sliced to true vocab."""
+    m = build_model("granite-moe-3b-a800m", reduced=True, vocab=250)
+    assert m.cfg.padded_vocab() == 256
+    params = m.init(KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 9), 0, 250)}
+    loss = m.loss(params, batch)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,95 @@
+"""Serving-path tests: caches, ring SWA decode, generation, samplers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.serving import engine, kv_cache
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestRingSWA:
+    def test_ring_decode_matches_full_window(self):
+        """Decoding with the window-sized ring buffer == decoding with a
+        full-length cache (window masking), past the wrap point."""
+        m = build_model("h2o-danube-3-4b", reduced=True)
+        cfg = m.cfg                                 # window = 8 reduced
+        params = m.init(KEY)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 21), 0,
+                                  cfg.vocab)
+        # path A: full-length cache (ring=False -> alloc = max_len)
+        _, cache_full = m.prefill(params, toks[:, :4], max_len=32)
+        # path B: ring cache seeded by replaying the same tokens stepwise
+        ring = kv_cache.init_cache(cfg, 2, 32, ring=True)
+        assert ring["k"].shape[2] == cfg.swa_window
+        logits_full = logits_ring = None
+        for t in range(4, 21):
+            logits_full, cache_full = engine.decode_step(
+                params, cache_full, toks[:, t], jnp.int32(t), cfg=cfg)
+        for t in range(0, 21):
+            logits_ring, ring = engine.decode_step(
+                params, ring, toks[:, t], jnp.int32(t), cfg=cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_full[:, :cfg.vocab]),
+            np.asarray(logits_ring[:, :cfg.vocab]), atol=2e-3)
+
+
+class TestCaches:
+    @pytest.mark.parametrize("arch", ["granite-20b", "deepseek-v2-lite-16b",
+                                      "rwkv6-1.6b", "hymba-1.5b",
+                                      "whisper-base"])
+    def test_cache_shapes_per_family(self, arch):
+        m = build_model(arch, reduced=True)
+        cache = m.init_cache(batch=3, max_len=16)
+        leaves = jax.tree.leaves(cache)
+        assert leaves
+        for leaf in leaves:
+            assert leaf.shape[0] == m.cfg.n_layers       # stacked L
+            assert leaf.shape[1] == 3                    # batch
+
+    def test_cache_bytes_mla_smaller_than_dense_equiv(self):
+        """MLA's point: the latent cache is much smaller than full KV."""
+        import dataclasses
+
+        m = build_model("deepseek-v2-lite-16b")
+        cfg = m.cfg
+        mla_bytes = kv_cache.cache_bytes(cfg, 8, 1024)
+        dense_cfg = dataclasses.replace(cfg, mla=None)
+        dense_bytes = kv_cache.cache_bytes(dense_cfg, 8, 1024)
+        assert mla_bytes < dense_bytes / 5
+
+
+class TestGeneration:
+    def test_whisper_generate(self):
+        m = build_model("whisper-base", reduced=True)
+        params = m.init(KEY)
+        frames = jax.random.normal(KEY, (2, 12, m.cfg.d_model))
+        prompt = jax.random.randint(KEY, (2, 4), 0, m.cfg.vocab)
+        out = m.generate(params, prompt, steps=6, key=jax.random.PRNGKey(2),
+                         frames=frames, max_len=16)
+        assert out.shape == (2, 7)
+
+    def test_vlm_generate(self):
+        m = build_model("qwen2-vl-7b", reduced=True)
+        params = m.init(KEY)
+        patches = jax.random.normal(KEY, (2, m.cfg.n_patches,
+                                          m.cfg.d_model))
+        prompt = jax.random.randint(KEY, (2, 4), 0, m.cfg.vocab)
+        out = m.generate(params, prompt, steps=5, key=jax.random.PRNGKey(2),
+                         patches=patches, max_len=32)
+        assert out.shape == (2, 6)
+        assert int(out.max()) < m.cfg.vocab
+
+    def test_sampler_distribution(self):
+        """Two-pass sampler matches categorical over the same probs."""
+        logits = jnp.log(jnp.array([[0.7, 0.2, 0.1]])) * 1.0
+        counts = np.zeros(3)
+        for i in range(300):
+            t = engine.sample_token(logits, jax.random.PRNGKey(i), 1.0,
+                                    vocab=3)
+            counts[int(t[0])] += 1
+        freq = counts / counts.sum()
+        np.testing.assert_allclose(freq, [0.7, 0.2, 0.1], atol=0.08)

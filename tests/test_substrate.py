@@ -1,0 +1,211 @@
+"""Substrate units: optimizer, schedules, data pipeline, MoE, SSM cores."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.data.pipeline import SyntheticLM
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.optim import adamw, schedules
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw.init(params)
+        for _ in range(300):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = adamw.update(g, state, params, lr=0.05,
+                                            weight_decay=0.0)
+        np.testing.assert_allclose(np.asarray(params["w"]), 0.0, atol=1e-2)
+
+    def test_grad_clipping(self):
+        g = {"w": jnp.full((10,), 100.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(norm) > 100
+        np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                                   rtol=1e-5)
+
+    def test_moments_are_f32_for_bf16_params(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = adamw.init(params)
+        assert state.m["w"].dtype == jnp.float32
+        g = {"w": jnp.ones((4,), jnp.bfloat16)}
+        p2, s2, _ = adamw.update(g, state, params, 1e-2)
+        assert p2["w"].dtype == jnp.bfloat16
+        assert s2.v["w"].dtype == jnp.float32
+
+
+class TestSchedules:
+    def test_warmup_then_decay(self):
+        s = lambda i: float(schedules.warmup_cosine(
+            jnp.int32(i), peak_lr=1.0, warmup=10, total=100))
+        assert s(5) == pytest.approx(0.5)
+        assert s(10) == pytest.approx(1.0, abs=0.01)
+        assert s(100) == pytest.approx(0.1, abs=0.01)   # floor=0.1
+        assert s(55) < s(20)
+
+
+class TestDataPipeline:
+    def test_deterministic_and_skippable(self):
+        cfg = get_config("granite-20b").reduced()
+        ds = SyntheticLM(cfg, ShapeCell("t", 16, 4, "train"), seed=3)
+        b5a = ds.batch_at(5)
+        b5b = ds.batch_at(5)
+        np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+        it = ds.iterate(start_step=5)
+        step, batch = next(it)
+        assert step == 5
+        np.testing.assert_array_equal(batch["tokens"], b5a["tokens"])
+
+    def test_zipf_distribution_shape(self):
+        cfg = get_config("granite-20b").reduced()
+        ds = SyntheticLM(cfg, ShapeCell("t", 256, 8, "train"))
+        toks = ds.batch_at(0)["tokens"].ravel()
+        # rank-0 token must be the most frequent (Zipf)
+        counts = np.bincount(toks, minlength=cfg.vocab)
+        assert counts[0] == counts.max()
+        assert (toks < cfg.vocab).all() and (toks >= 0).all()
+
+    def test_family_batches(self):
+        for arch in ("whisper-base", "qwen2-vl-7b"):
+            cfg = get_config(arch).reduced()
+            ds = SyntheticLM(cfg, ShapeCell("t", 32, 2, "train"))
+            b = ds.batch_at(0)
+            if cfg.family == "encdec":
+                assert b["frames"].shape == (2, 32, cfg.d_model)
+                assert b["dec_tokens"].shape == (2, cfg.dec_len)
+            else:
+                assert b["patches"].shape == (2, cfg.n_patches, cfg.d_model)
+
+
+class TestMoE:
+    def _setup(self):
+        cfg = get_config("granite-moe-3b-a800m").reduced()
+        p = moe_mod.init_moe(KEY, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        return cfg, p, x
+
+    def test_dense_vs_dispatch_high_capacity(self):
+        """With capacity >= tokens, dispatch == dense exactly (no drops)."""
+        cfg, p, x = self._setup()
+        y_dense = moe_mod.moe_dense(p, x, cfg)
+        y_disp = moe_mod.moe_dispatch(p, x, cfg, capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(y_disp), np.asarray(y_dense),
+                                   atol=2e-5)
+
+    def test_topk_weights_normalized(self):
+        cfg, p, x = self._setup()
+        w, idx, probs = moe_mod._router(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+        assert int(idx.max()) < cfg.moe.n_experts
+
+    def test_load_balance_loss_range(self):
+        cfg, p, x = self._setup()
+        aux = moe_mod.aux_load_balance_loss(p, x, cfg)
+        assert 0.5 < float(aux) < float(cfg.moe.n_experts)
+
+    def test_capacity_drops_are_bounded(self):
+        """With tiny capacity outputs differ from dense but stay finite."""
+        cfg, p, x = self._setup()
+        y = moe_mod.moe_dispatch(p, x, cfg, capacity_factor=0.5)
+        assert np.isfinite(np.asarray(y)).all()
+
+
+class TestSSMCores:
+    @given(st.integers(2, 5), st.integers(4, 24))
+    @settings(max_examples=10, deadline=None)
+    def test_ssd_chunked_matches_step_recurrence(self, b, s):
+        h, dk, dv = 2, 4, 8
+        ks = jax.random.split(jax.random.PRNGKey(b * s), 4)
+        xv = jax.random.normal(ks[0], (b, s, h, dv))
+        la = -jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        bk = jax.random.normal(ks[2], (b, s, h, dk))
+        ck = jax.random.normal(ks[3], (b, s, h, dk))
+        y_chunk = ssm.ssd_chunked(xv, la, bk, ck, chunk=4)
+        # sequential reference
+        st_ = jnp.zeros((b, h, dk, dv))
+        ys = []
+        for t in range(s):
+            y, st_ = ssm.ssd_step(st_, xv[:, t], la[:, t], bk[:, t],
+                                  ck[:, t])
+            ys.append(y)
+        ref = jnp.stack(ys, 1)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(ref),
+                                   atol=2e-4)
+
+    @given(st.integers(2, 3), st.integers(4, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_wkv6_chunked_matches_step_recurrence(self, b, s):
+        h, dk, dv = 2, 4, 4
+        ks = jax.random.split(jax.random.PRNGKey(b + s * 7), 5)
+        r = jax.random.normal(ks[0], (b, s, h, dk))
+        k = jax.random.normal(ks[1], (b, s, h, dk))
+        v = jax.random.normal(ks[2], (b, s, h, dv))
+        lw = -jax.nn.softplus(jax.random.normal(ks[3], (b, s, h, dk)))
+        u = jax.random.normal(ks[4], (h, dk)) * 0.3
+        out_chunk = ssm.wkv6_chunked(r, k, v, lw, u, chunk=4)
+        st_ = jnp.zeros((b, h, dk, dv))
+        ys = []
+        for t in range(s):
+            y, st_ = ssm.wkv6_step(st_, r[:, t], k[:, t], v[:, t],
+                                   lw[:, t], u)
+            ys.append(y)
+        ref = jnp.stack(ys, 1)
+        np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(ref),
+                                   atol=2e-4)
+
+    def test_scan_path_matches_unrolled(self):
+        """Long-sequence lax.scan chunk path == unrolled (same math)."""
+        b, s, h, dk, dv = 1, 64, 2, 4, 4
+        ks = jax.random.split(KEY, 5)
+        r = jax.random.normal(ks[0], (b, s, h, dk))
+        k = jax.random.normal(ks[1], (b, s, h, dk))
+        v = jax.random.normal(ks[2], (b, s, h, dv))
+        lw = -jax.nn.softplus(jax.random.normal(ks[3], (b, s, h, dk)))
+        u = jax.random.normal(ks[4], (h, dk)) * 0.3
+        unrolled = ssm.wkv6_chunked(r, k, v, lw, u, chunk=2)  # 32 chunks
+        import unittest.mock as mock
+
+        with mock.patch.object(ssm, "MAX_CHUNKS", 4):
+            scanned = ssm.wkv6_chunked(r, k, v, lw, u, chunk=2)
+        np.testing.assert_allclose(np.asarray(scanned),
+                                   np.asarray(unrolled), atol=1e-5)
+
+    def test_scan_flops_correction_positive_for_long_seq(self):
+        assert ssm.scan_flops_correction("rwkv6", 32, 32768, 32, 64, 64,
+                                         32) > 0
+        assert ssm.scan_flops_correction("rwkv6", 32, 4096, 32, 64, 64,
+                                         32) == 0.0
+
+
+class TestMoEGather:
+    def test_gather_matches_dense_high_capacity(self):
+        from repro.configs import get_config
+
+        cfg = get_config("granite-moe-3b-a800m").reduced()
+        p = moe_mod.init_moe(KEY, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        y_dense = moe_mod.moe_dense(p, x, cfg)
+        y_gather = moe_mod.moe_gather(p, x, cfg, capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(y_gather),
+                                   np.asarray(y_dense), atol=2e-5)
+
+    def test_gather_matches_dispatch_same_capacity(self):
+        """Same capacity => identical drop pattern => identical outputs."""
+        from repro.configs import get_config
+
+        cfg = get_config("deepseek-v2-lite-16b").reduced()
+        p = moe_mod.init_moe(KEY, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 24, cfg.d_model))
+        y_disp = moe_mod.moe_dispatch(p, x, cfg, capacity_factor=1.0)
+        y_gath = moe_mod.moe_gather(p, x, cfg, capacity_factor=1.0)
+        np.testing.assert_allclose(np.asarray(y_gath), np.asarray(y_disp),
+                                   atol=2e-5)
