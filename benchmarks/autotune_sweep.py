@@ -1,0 +1,59 @@
+"""Beyond-paper: block-shape autotune sweep — tuned vs default timings.
+
+The paper tunes its meta-parameters (unroll factor / accumulator count) per
+architecture; here the analogue is the Pallas tile shape.  For each
+benchmark shape this sweeps ``registry.candidate_blocks`` through
+``kernels.autotune``, reports the heuristic-default timing vs the tuned
+best, and persists the winners to the JSON autotune cache so later runs
+(and any ``SoftmaxPolicy(autotune=True)`` site) pick them up for free.
+
+On this container the kernels run in interpret mode, so absolute numbers
+are not a TPU performance artifact — the sweep demonstrates the tuning
+*subsystem* (search, persistence, cache hit) end-to-end.
+"""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+from repro.kernels import autotune, registry
+
+# (op, rows, cols): LM-head vocab rows, long softmax rows, fused-CE tile
+SHAPES = (
+    ("softmax", 64, 4096),
+    ("softmax", 8, 16384),
+    ("xent", 128, 4096),
+)
+
+FAST_SHAPES = (
+    ("softmax", 16, 1024),
+    ("xent", 32, 512),
+)
+
+
+def run(shapes=None, cache_file: str | None = None, reps: int = 3,
+        min_time_s: float = 0.05):
+    cache = registry.cache_path(cache_file)
+    rows = []
+    for op, r, c in shapes or SHAPES:
+        res = autotune.autotune_op(op, r, c, reps=reps,
+                                   min_time_s=min_time_s,
+                                   cache_file=cache_file)
+        rows.append((f"autotune/{op}/r={r}/c={c}/default{res.default}",
+                     round(res.default_s * 1e6, 2), "1.00x"))
+        rows.append((f"autotune/{op}/r={r}/c={c}/tuned{res.best}",
+                     round(res.best_s * 1e6, 2), f"{res.speedup:.2f}x"))
+        # round-trip: the persisted entry must now win resolution
+        registry.load_cache(cache, force=True)
+        hit = registry.block_shapes(op, r, c, use_cache=True,
+                                    cache_file=cache)
+        assert hit == res.best, (hit, res.best)
+    rows.append((f"autotune/cache={cache}",
+                 os.path.getsize(cache) if os.path.exists(cache) else 0,
+                 "persisted"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,8 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   batched_rows        — Table 1 workload: LM-head vocab-sized rows
   fused_xent          — beyond-paper: fused two-pass CE vs unfused
   attention_stream    — beyond-paper: (m,n)-streamed attention memory/time
+  autotune_sweep      — beyond-paper: block-shape autotuner, tuned-vs-default
+                        (persists winners to the JSON autotune cache)
 
 Weak-scaling (Fig 8/9) is not reproducible on this 1-core container and is
 covered by the multi-chip roofline analysis instead (EXPERIMENTS.md SSRoofline).
@@ -25,8 +27,8 @@ def main() -> None:
                    help="smaller grids (CI mode)")
     args = p.parse_args()
 
-    from benchmarks import (attention_stream, batched_rows, fused_xent,
-                            library_comparison, memory_traffic,
+    from benchmarks import (attention_stream, autotune_sweep, batched_rows,
+                            fused_xent, library_comparison, memory_traffic,
                             pass_decomposition, softmax_sweep)
 
     benches = {
@@ -44,6 +46,8 @@ def main() -> None:
             vocabs=(49152,) if args.fast else (49152, 152064)),
         "attention_stream": lambda: attention_stream.run(
             seqs=(1024,) if args.fast else (1024, 4096, 8192)),
+        "autotune_sweep": lambda: autotune_sweep.run(
+            shapes=autotune_sweep.FAST_SHAPES if args.fast else None),
     }
     only = set(args.only.split(",")) if args.only else None
     for name, fn in benches.items():

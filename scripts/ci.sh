@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Fast deterministic CI subset: the tier-1 command minus tests marked `slow`
+# (multi-minute e2e training loops / compile-heavy mesh lowering).  Full
+# tier-1 remains `PYTHONPATH=src python -m pytest -x -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"

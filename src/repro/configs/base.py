@@ -71,9 +71,15 @@ class ModelConfig:
     tie_embeddings: bool = False
     norm_eps: float = 1e-5
     act: str = "silu"                        # silu (swiglu) | gelu
-    # numerics / paper knobs
+    # numerics / paper knobs: the softmax policy (algorithm, kernels, block
+    # meta-parameters) — resolved ONCE into a SoftmaxPolicy via
+    # :meth:`softmax_policy`; models/serving/training consume that object.
     softmax_algorithm: str = "two_pass"
     use_kernels: bool = False                # Pallas kernels at softmax sites
+    softmax_block_rows: Optional[int] = None  # explicit tile overrides
+    softmax_block_cols: Optional[int] = None
+    softmax_autotune: bool = False           # consult persisted tune cache
+    softmax_autotune_cache: Optional[str] = None
     # decode parallelism: shard the KV-cache SEQUENCE over the model axis and
     # replicate q-heads — each shard attends its chunk, the (m, n) partial
     # combine restores exactness (DESIGN SS2.4).  Perf lever for GQA archs
@@ -85,6 +91,12 @@ class ModelConfig:
     scan_layers: bool = True
 
     # ----- derived ---------------------------------------------------------
+    def softmax_policy(self):
+        """The frozen SoftmaxPolicy every softmax site resolves through."""
+        from repro.core.policy import SoftmaxPolicy  # keep configs dep-light
+
+        return SoftmaxPolicy.from_config(self)
+
     def resolved_head_dim(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
 

@@ -10,6 +10,7 @@ from repro.core.numerics import (  # noqa: F401
     ext_zero,
     exp_via_extexp,
 )
+from repro.core.policy import DEFAULT_POLICY, SoftmaxPolicy  # noqa: F401
 from repro.core.softmax_api import SoftmaxAlgorithm, logsumexp, softmax  # noqa: F401
 from repro.core.twopass import (  # noqa: F401
     twopass_logsumexp,

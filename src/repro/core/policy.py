@@ -1,0 +1,124 @@
+"""SoftmaxPolicy: one frozen object deciding how every softmax site runs.
+
+Every paper-technique site (attention scores, MoE router, sampler, fused
+LM-head CE) used to thread ad-hoc ``algorithm=``/``use_kernel=`` kwargs —
+several of which were silently dropped.  A :class:`SoftmaxPolicy` carries
+the full decision instead:
+
+  * which of the paper's three algorithms (Alg 1/2/3),
+  * whether the Pallas kernels are used (vs the jnp forms),
+  * explicit block-shape overrides (the paper's meta-parameters),
+  * whether resolution may consult the persisted autotune cache.
+
+``configs/base.py`` builds the policy once per ``ModelConfig``
+(:meth:`ModelConfig.softmax_policy`); models/serving/training consume it.
+Block shapes resolve through ``repro.kernels.registry`` — the single
+canonical model replacing the three former copy-pasted heuristics.
+
+Policies are frozen + hashable, so they are safe to close over in jit'd
+functions and usable as static arguments / cache keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import twopass
+from repro.core.softmax_api import _ALGOS, SoftmaxAlgorithm
+
+
+@dataclass(frozen=True)
+class SoftmaxPolicy:
+    algorithm: SoftmaxAlgorithm = SoftmaxAlgorithm.TWO_PASS
+    use_kernels: bool = False
+    block_rows: Optional[int] = None     # per-axis overrides (None = model)
+    block_cols: Optional[int] = None
+    autotune: bool = False               # consult the persisted tune cache
+    autotune_cache: Optional[str] = None  # cache file (None = env/default)
+
+    def __post_init__(self):
+        # accept plain strings from configs ("two_pass", ...)
+        object.__setattr__(self, "algorithm",
+                           SoftmaxAlgorithm(self.algorithm))
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_config(cls, cfg) -> "SoftmaxPolicy":
+        """Build from any object with the ModelConfig softmax knobs."""
+        return cls(
+            algorithm=getattr(cfg, "softmax_algorithm", "two_pass"),
+            use_kernels=getattr(cfg, "use_kernels", False),
+            block_rows=getattr(cfg, "softmax_block_rows", None),
+            block_cols=getattr(cfg, "softmax_block_cols", None),
+            autotune=getattr(cfg, "softmax_autotune", False),
+            autotune_cache=getattr(cfg, "softmax_autotune_cache", None))
+
+    def replace(self, **kw) -> "SoftmaxPolicy":
+        return dataclasses.replace(self, **kw)
+
+    # -- block resolution ----------------------------------------------------
+    def resolve_blocks(self, op: str, rows: int, cols: int,
+                       dtype=jnp.float32) -> tuple[int, int]:
+        """Registry resolution: overrides > (autotune cache) > heuristic."""
+        from repro.kernels import registry  # lazy: kernels are optional
+
+        return registry.block_shapes(
+            op, rows, cols, dtype, block_rows=self.block_rows,
+            block_cols=self.block_cols, use_cache=self.autotune,
+            cache_file=self.autotune_cache)
+
+    def tune(self, op: str, rows: int, cols: int, dtype=jnp.float32, **kw):
+        """Eagerly autotune one (op, shape) and persist it to this policy's
+        cache — must run OUTSIDE jit (it times real executions)."""
+        from repro.kernels import autotune  # lazy
+
+        return autotune.autotune_op(op, rows, cols, dtype,
+                                    cache_file=self.autotune_cache, **kw)
+
+    # -- dispatch ------------------------------------------------------------
+    def softmax(self, x: jax.Array, axis: int = -1) -> jax.Array:
+        """Softmax along ``axis`` under this policy.  The kernel path covers
+        last-axis reductions (leading dims collapse to rows); everything
+        else falls back to the jnp algorithm forms."""
+        if self.use_kernels and axis in (-1, x.ndim - 1):
+            from repro.kernels import ops  # lazy
+
+            return ops.softmax(x, algorithm=self.algorithm, policy=self)
+        return _ALGOS[self.algorithm](x, axis=axis)
+
+    def logsumexp(self, x: jax.Array, axis: int = -1,
+                  keepdims: bool = False) -> jax.Array:
+        """logsumexp with the selected algorithm's pass structure."""
+        if self.algorithm == SoftmaxAlgorithm.TWO_PASS:
+            return twopass.twopass_logsumexp(x, axis=axis, keepdims=keepdims)
+        mu = jnp.max(x, axis=axis, keepdims=True)
+        s = jnp.sum(jnp.exp(x - mu), axis=axis, keepdims=True)
+        out = (jnp.log(s) + mu).astype(x.dtype)
+        if not keepdims:
+            out = jnp.squeeze(out, axis=axis)
+        return out
+
+    def cross_entropy(self, logits: jax.Array,
+                      labels: jax.Array) -> jax.Array:
+        """Per-token CE ([T, V], [T] -> [T]), probabilities never
+        materialized.  Kernel path: the fused two-pass Pallas CE (fwd =
+        pass 1, bwd = pass 2); jnp path: one (m, n) logsumexp pass."""
+        if self.use_kernels:
+            from repro.kernels import ops  # lazy
+
+            bt, bv = self.resolve_blocks("xent", *logits.shape,
+                                         logits.dtype)
+            return ops.cross_entropy(logits, labels, bt, bv)
+        lse = self.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                                 labels[:, None].astype(jnp.int32),
+                                 axis=-1)[:, 0]
+        return lse - ll
+
+
+DEFAULT_POLICY = SoftmaxPolicy()

@@ -61,27 +61,23 @@ def softmax(x: jax.Array, axis: int = -1,
             use_kernel: bool = False) -> jax.Array:
     """Softmax along ``axis`` with a selectable memory-pass algorithm.
 
-    ``use_kernel=True`` routes 2-D, last-axis cases through the Pallas TPU
-    kernels (interpret-mode on CPU); everything else uses the jnp forms.
+    Thin compatibility shim: resolution lives in
+    :class:`repro.core.policy.SoftmaxPolicy` (kernel dispatch, block shapes,
+    autotune cache).  ``use_kernel=True`` routes last-axis cases through the
+    Pallas kernels (interpret-mode on CPU).
     """
-    algorithm = SoftmaxAlgorithm(algorithm)
-    if use_kernel and axis in (-1, x.ndim - 1):
-        from repro.kernels import ops  # local import: kernels are optional
+    from repro.core.policy import SoftmaxPolicy  # local: avoid import cycle
 
-        return ops.softmax(x, algorithm=algorithm)
-    return _ALGOS[algorithm](x, axis=axis)
+    return SoftmaxPolicy(algorithm=SoftmaxAlgorithm(algorithm),
+                         use_kernels=use_kernel).softmax(x, axis=axis)
 
 
 def logsumexp(x: jax.Array, axis: int = -1, keepdims: bool = False,
               algorithm: SoftmaxAlgorithm | str = SoftmaxAlgorithm.TWO_PASS,
               ) -> jax.Array:
-    """logsumexp with the selected algorithm's pass structure."""
-    algorithm = SoftmaxAlgorithm(algorithm)
-    if algorithm == SoftmaxAlgorithm.TWO_PASS:
-        return twopass.twopass_logsumexp(x, axis=axis, keepdims=keepdims)
-    mu = jnp.max(x, axis=axis, keepdims=True)
-    s = jnp.sum(jnp.exp(x - mu), axis=axis, keepdims=True)
-    out = (jnp.log(s) + mu).astype(x.dtype)
-    if not keepdims:
-        out = jnp.squeeze(out, axis=axis)
-    return out
+    """logsumexp with the selected algorithm's pass structure (shim over
+    :class:`repro.core.policy.SoftmaxPolicy`)."""
+    from repro.core.policy import SoftmaxPolicy  # local: avoid import cycle
+
+    return SoftmaxPolicy(algorithm=SoftmaxAlgorithm(algorithm)).logsumexp(
+        x, axis=axis, keepdims=keepdims)

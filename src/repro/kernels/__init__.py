@@ -11,3 +11,4 @@ from repro.kernels.ops import (  # noqa: F401
     logsumexp_stats,
     softmax,
 )
+from repro.kernels.registry import block_shapes, get_spec  # noqa: F401

@@ -1,0 +1,172 @@
+"""Block-shape autotuner: the paper's meta-parameter search, persisted.
+
+The paper tunes unroll factor / accumulator count per architecture by
+exhaustive timing; the TPU analogue is the Pallas tile shape.  This module
+sweeps :func:`registry.candidate_blocks` for an op at a given problem shape,
+timing each candidate with ``block_until_ready`` (median of repeated calls),
+and records the winner in the JSON cache that
+:func:`registry.block_shapes` consults — so one offline sweep speeds up
+every later run, including inside jit traces (resolution is a pure dict
+lookup at trace time).
+
+Run directly (``python -m repro.kernels.autotune``) or through
+``benchmarks/autotune_sweep.py`` which also reports tuned-vs-default.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+
+
+@dataclass
+class TuneResult:
+    op: str
+    rows: int
+    cols: int
+    dtype: str
+    best: tuple[int, int]
+    best_s: float
+    default: tuple[int, int]
+    default_s: float
+    cache_key: str | None = None
+    timings: dict = field(default_factory=dict)   # (br, bc) -> seconds
+
+    @property
+    def speedup(self) -> float:
+        return self.default_s / self.best_s if self.best_s else 1.0
+
+
+def _median_time(fn: Callable, *args, reps: int = 3,
+                 min_time_s: float = 0.05) -> float:
+    """Median secs/call; compile+warm excluded (benchmarks.common protocol,
+    kept dependency-free so the kernel package stays importable alone)."""
+    jax.block_until_ready(fn(*args))
+    meds = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        calls = 0
+        while time.perf_counter() - t0 < min_time_s / reps:
+            jax.block_until_ready(fn(*args))
+            calls += 1
+        meds.append((time.perf_counter() - t0) / max(calls, 1))
+    meds.sort()
+    return meds[len(meds) // 2]
+
+
+def _runner_for(op: str) -> Callable:
+    """(x..., br, bc) -> timed callable for one op at fixed blocks.  Block
+    overrides are passed explicitly so the sweep bypasses the cache."""
+    from repro.kernels import ops
+
+    if op in ("softmax", "logsumexp"):
+        def run(x, br, bc):
+            if op == "softmax":
+                return ops.softmax(x, block_rows=br, block_cols=bc)
+            return ops.logsumexp_stats(x, block_rows=br, block_cols=bc)
+        return run
+    if op == "xent":
+        def run(args, br, bc):
+            logits, labels = args
+            return ops.cross_entropy(logits, labels, br, bc)
+        return run
+    raise ValueError(f"op {op!r} is not autotunable here "
+                     f"(registered: {registry.registered_ops()})")
+
+
+def _inputs_for(op: str, rows: int, cols: int, dtype):
+    key = jax.random.PRNGKey(0)
+    x = (jax.random.normal(key, (rows, cols)) * 4).astype(dtype)
+    if op == "xent":
+        labels = jax.random.randint(jax.random.PRNGKey(1), (rows,), 0, cols)
+        return (x, labels)
+    return x
+
+
+def autotune_op(op: str, rows: int, cols: int, dtype=jnp.float32, *,
+                candidates: list[tuple[int, int]] | None = None,
+                reps: int = 3, min_time_s: float = 0.05,
+                persist: bool = True, cache_file: str | None = None,
+                verbose: bool = False) -> TuneResult:
+    """Sweep block candidates for one (op, shape, dtype); persist the best.
+
+    Returns a :class:`TuneResult` carrying the full timing table so callers
+    (benchmarks, tests) can report tuned-vs-default without re-timing.
+    """
+    spec = registry.get_spec(op)
+    run = _runner_for(op)
+    x = _inputs_for(op, rows, cols, dtype)
+    cands = candidates or registry.candidate_blocks(op, rows, cols)
+    default = spec.heuristic_blocks(rows, cols)
+    if default not in cands:
+        cands = list(cands) + [default]
+
+    timings: dict = {}
+    for br, bc in cands:
+        try:
+            sec = _median_time(lambda t: run(t, br, bc), x, reps=reps,
+                               min_time_s=min_time_s)
+        except Exception as e:  # candidate invalid on this backend: skip
+            if verbose:
+                print(f"  {op} ({br},{bc}): failed ({type(e).__name__})")
+            continue
+        timings[(br, bc)] = sec
+        if verbose:
+            print(f"  {op} ({br},{bc}): {sec * 1e6:.1f}us")
+    if not timings:
+        raise RuntimeError(f"no viable block candidate for {op} "
+                           f"({rows}x{cols}, {dtype})")
+
+    best = min(timings, key=timings.get)
+    res = TuneResult(op=op, rows=rows, cols=cols,
+                     dtype=str(jnp.dtype(dtype)), best=best,
+                     best_s=timings[best], default=default,
+                     default_s=timings.get(default, timings[best]),
+                     timings=timings)
+    res.cache_key = registry.record_tuned(
+        op, rows, cols, dtype, best, path=cache_file, persist=persist,
+        meta=dict(best_us=round(timings[best] * 1e6, 2),
+                  default_us=round(res.default_s * 1e6, 2),
+                  rows=rows, cols=cols))
+    return res
+
+
+DEFAULT_SWEEP = (
+    # (op, rows, cols): LM-head vocab rows, attention score tiles, long rows
+    ("softmax", 64, 4096),
+    ("softmax", 8, 32768),
+    ("xent", 128, 4096),
+)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--op", default=None, help="softmax|logsumexp|xent")
+    p.add_argument("--rows", type=int, default=64)
+    p.add_argument("--cols", type=int, default=4096)
+    p.add_argument("--dtype", default="float32")
+    p.add_argument("--cache", default=None,
+                   help="cache file (default: $REPRO_AUTOTUNE_CACHE or "
+                        f"{registry.DEFAULT_CACHE_FILE})")
+    args = p.parse_args(argv)
+
+    sweep = ([(args.op, args.rows, args.cols)] if args.op
+             else list(DEFAULT_SWEEP))
+    for op, rows, cols in sweep:
+        r = autotune_op(op, rows, cols, jnp.dtype(args.dtype),
+                        cache_file=args.cache, verbose=True)
+        print(f"{op} {rows}x{cols}: best={r.best} "
+              f"({r.best_s * 1e6:.1f}us) default={r.default} "
+              f"({r.default_s * 1e6:.1f}us) speedup={r.speedup:.2f}x")
+    print(f"cache: {registry.cache_path(args.cache)}")
+
+
+if __name__ == "__main__":
+    main()

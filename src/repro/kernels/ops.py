@@ -4,6 +4,11 @@ Handles: arbitrary leading dims (collapsed to rows), padding to block
 multiples (cols padded with -inf, which is an exact monoid zero through the
 whole (m, n) algebra), algorithm dispatch, and ``custom_vjp`` definitions so
 the fused kernels are differentiable.
+
+Block shapes resolve through ``repro.kernels.registry`` — the one canonical
+model (overrides > autotune cache > heuristic) shared by every op; this
+module holds no block heuristics of its own.  A :class:`SoftmaxPolicy` may
+be passed to carry overrides/autotune settings from config.
 """
 
 from __future__ import annotations
@@ -16,25 +21,30 @@ import jax.numpy as jnp
 from repro.core.softmax_api import SoftmaxAlgorithm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
+from repro.kernels import registry
 from repro.kernels import threepass_softmax as _tp3
 from repro.kernels import twopass_softmax as _tp2
 from repro.kernels import twopass_xent as _xent
 
-
-def _round_up(x: int, mult: int) -> int:
-    return (x + mult - 1) // mult * mult
+_round_up = registry.round_up
 
 
-def _pick_blocks(rows: int, cols: int, block_rows: int | None,
-                 block_cols: int | None) -> tuple[int, int]:
-    """Block-shape heuristic: full-row tiles for short rows (one grid step
-    along the reduction => no fold overhead), capped tiles for long rows."""
-    if block_cols is None:
-        block_cols = cols if cols <= 4096 else 2048
-        block_cols = _round_up(min(block_cols, _round_up(cols, 128)), 128)
-    if block_rows is None:
-        block_rows = max(8, min(256, _round_up(rows, 8)))
-    return block_rows, block_cols
+def _blocks(op: str, rows: int, cols: int, dtype, block_rows, block_cols,
+            policy=None) -> tuple[int, int]:
+    """Resolve block shapes: explicit args win, then the policy's overrides
+    and cache setting, then the registry model."""
+    if policy is not None:
+        if block_rows is None:
+            block_rows = policy.block_rows
+        if block_cols is None:
+            block_cols = policy.block_cols
+        return registry.block_shapes(
+            op, rows, cols, dtype, block_rows=block_rows,
+            block_cols=block_cols, use_cache=policy.autotune,
+            cache_file=policy.autotune_cache)
+    return registry.block_shapes(op, rows, cols, dtype,
+                                 block_rows=block_rows,
+                                 block_cols=block_cols)
 
 
 def _as_rows(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
@@ -52,12 +62,20 @@ _SOFTMAX_2D = {
 def softmax(x: jax.Array,
             algorithm: SoftmaxAlgorithm | str = SoftmaxAlgorithm.TWO_PASS,
             block_rows: int | None = None,
-            block_cols: int | None = None) -> jax.Array:
-    """Last-axis softmax through the Pallas kernels (any leading dims)."""
-    algorithm = SoftmaxAlgorithm(algorithm)
+            block_cols: int | None = None,
+            policy=None) -> jax.Array:
+    """Last-axis softmax through the Pallas kernels (any leading dims).
+    Differentiable: the backward is the analytic softmax VJP (needs only
+    ``y``), so kernel softmax sites train (attention scores, MoE router)."""
+    return _softmax_vjp(x, SoftmaxAlgorithm(algorithm), block_rows,
+                        block_cols, policy)
+
+
+def _softmax_padded(x, algorithm, block_rows, block_cols, policy):
     x2, lead = _as_rows(x)
     rows, cols = x2.shape
-    br, bc = _pick_blocks(rows, cols, block_rows, block_cols)
+    br, bc = _blocks("softmax", rows, cols, x.dtype, block_rows, block_cols,
+                     policy)
     pr, pc = _round_up(rows, br), _round_up(cols, bc)
     padded = jnp.full((pr, pc), -jnp.inf, x2.dtype)
     # Padded rows are all -inf: harmless garbage, sliced away below.  Padded
@@ -65,6 +83,25 @@ def softmax(x: jax.Array,
     padded = jax.lax.dynamic_update_slice(padded, x2, (0, 0))
     y = _SOFTMAX_2D[algorithm](padded, block_rows=br, block_cols=bc)
     return y[:rows, :cols].reshape(*lead, cols)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _softmax_vjp(x, algorithm, block_rows, block_cols, policy):
+    return _softmax_padded(x, algorithm, block_rows, block_cols, policy)
+
+
+def _softmax_fwd(x, algorithm, block_rows, block_cols, policy):
+    y = _softmax_padded(x, algorithm, block_rows, block_cols, policy)
+    return y, y
+
+
+def _softmax_bwd(algorithm, block_rows, block_cols, policy, y, dy):
+    yf, dyf = y.astype(jnp.float32), dy.astype(jnp.float32)
+    dx = yf * (dyf - jnp.sum(dyf * yf, axis=-1, keepdims=True))
+    return (dx.astype(y.dtype),)
+
+
+_softmax_vjp.defvjp(_softmax_fwd, _softmax_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -79,14 +116,6 @@ def cross_entropy(logits: jax.Array, labels: jax.Array,
     return loss
 
 
-def _xent_blocks(t, v, block_t, block_v):
-    if block_v is None:
-        block_v = min(_round_up(v, 128), 2048)
-    if block_t is None:
-        block_t = max(8, min(256, _round_up(t, 8)))
-    return block_t, block_v
-
-
 def _xent_pad(logits, labels, bt, bv):
     t, v = logits.shape
     pt, pv = _round_up(t, bt), _round_up(v, bv)
@@ -98,7 +127,7 @@ def _xent_pad(logits, labels, bt, bv):
 
 def _xent_fwd_padded(logits, labels, block_t, block_v):
     t, v = logits.shape
-    bt, bv = _xent_blocks(t, v, block_t, block_v)
+    bt, bv = _blocks("xent", t, v, logits.dtype, block_t, block_v)
     lp, lab, _, _ = _xent_pad(logits, labels, bt, bv)
     # Padded rows: logits all -inf with label 0 -> label_logit = -inf,
     # lse = log(0) = -inf -> loss = nan, sliced off before use.
@@ -114,7 +143,7 @@ def _ce_fwd(logits, labels, block_t, block_v):
 def _ce_bwd(block_t, block_v, res, dloss):
     logits, labels, m_sum, n_sum = res
     t, v = logits.shape
-    bt, bv = _xent_blocks(t, v, block_t, block_v)
+    bt, bv = _blocks("xent", t, v, logits.dtype, block_t, block_v)
     lp, lab, pt, _ = _xent_pad(logits, labels, bt, bv)
     dl = jnp.zeros((pt,), jnp.float32).at[:t].set(dloss.astype(jnp.float32))
     dlogits = _xent.xent_bwd_2d(lp, lab, m_sum, n_sum, dl,
@@ -139,8 +168,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def _flash_fwd_padded(q, k, v, causal, scale, window):
     b, h, sq, d = q.shape
     skv = k.shape[2]
-    bq = min(_fa.DEFAULT_BLOCK_Q, _round_up(sq, 128))
-    bk = min(_fa.DEFAULT_BLOCK_K, _round_up(skv, 128))
+    bq, bk = registry.block_shapes("flash_attention", sq, skv, q.dtype)
+    bq, bk = min(bq, _round_up(sq, 128)), min(bk, _round_up(skv, 128))
     psq, pskv = _round_up(sq, bq), _round_up(skv, bk)
     if psq != sq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, psq - sq), (0, 0)))
@@ -175,12 +204,21 @@ flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 
 def logsumexp_stats(x: jax.Array, block_rows: int | None = None,
-                    block_cols: int | None = None):
+                    block_cols: int | None = None, policy=None):
     """Pass-1 stats (m_sum, n_sum) for 2-D x via the Pallas kernel."""
     rows, cols = x.shape
-    br, bc = _pick_blocks(rows, cols, block_rows, block_cols)
+    br, bc = _blocks("logsumexp", rows, cols, x.dtype, block_rows,
+                     block_cols, policy)
     pr, pc = _round_up(rows, br), _round_up(cols, bc)
     padded = jnp.full((pr, pc), -jnp.inf, x.dtype)
     padded = jax.lax.dynamic_update_slice(padded, x, (0, 0))
     m, n = _tp2.twopass_stats_2d(padded, block_rows=br, block_cols=bc)
     return m[:rows], n[:rows]
+
+
+# Attach kernel entry points to the registry specs (introspection surface
+# for benchmarks/docs; the wrappers above remain the public API).
+registry.bind("softmax", _tp2.twopass_softmax_2d)
+registry.bind("logsumexp", _tp2.twopass_stats_2d)
+registry.bind("xent", _xent.xent_fwd_2d)
+registry.bind("flash_attention", _fa.flash_attention_gqa)

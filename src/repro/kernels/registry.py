@@ -1,0 +1,247 @@
+"""Kernel registry: the one canonical block-shape model for every Pallas op.
+
+The paper's central meta-parameters — tile shape / number of accumulators —
+were previously duplicated as three divergent heuristics (softmax, fused
+xent, flash attention).  This module collapses them into one model:
+
+  * every kernel registers a :class:`KernelSpec` describing its alignment
+    grid (sublane/lane multiples) and caps,
+  * :func:`block_shapes` resolves ``(rows, cols)`` for a key
+    ``(op, rows, cols, dtype, backend)`` through a three-level chain:
+    explicit overrides > persisted autotune cache > the spec's heuristic,
+  * the autotune cache is a JSON file written by ``repro.kernels.autotune``
+    and shared across processes/runs (keys are shape-bucketed so one sweep
+    covers a band of nearby shapes).
+
+``ops.py`` and ``core.softmax_api`` are thin shims over this registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+
+DEFAULT_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+DEFAULT_CACHE_FILE = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro_twopass", "autotune.json")
+
+
+def round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+# ---------------------------------------------------------------------------
+# Kernel specs.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel + its block-shape model parameters.
+
+    The heuristic (shared by every op) is:
+      cols: full row width while ``cols <= full_col_threshold`` (one grid
+            step along the reduction => no fold overhead), else ``col_cap``;
+            always a ``col_align`` (lane) multiple.
+      rows: smallest ``row_align`` (sublane) multiple covering ``rows``,
+            clamped to ``[row_align, row_cap]``.
+    """
+    name: str
+    fn: Optional[Callable] = None        # 2-D kernel entry point (or None)
+    row_align: int = 8
+    row_cap: int = 256
+    col_align: int = 128
+    col_cap: int = 2048
+    full_col_threshold: int = 4096
+
+    def heuristic_blocks(self, rows: int, cols: int) -> tuple[int, int]:
+        bc = cols if cols <= self.full_col_threshold else self.col_cap
+        bc = round_up(min(bc, round_up(cols, self.col_align)),
+                      self.col_align)
+        br = max(self.row_align,
+                 min(self.row_cap, round_up(rows, self.row_align)))
+        return br, bc
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_spec(op: str) -> KernelSpec:
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown kernel op {op!r}; "
+                       f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[op]
+
+
+def registered_ops() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache (JSON, persisted across runs).  Memoized per cache file so
+# multiple policies with different cache paths coexist in one process.
+# ---------------------------------------------------------------------------
+_cache_lock = threading.Lock()
+_caches: dict[str, dict] = {}              # cache file path -> entries
+
+
+def cache_path(path: str | None = None) -> str:
+    return path or os.environ.get(DEFAULT_CACHE_ENV) or DEFAULT_CACHE_FILE
+
+
+def _bucket(x: int) -> int:
+    """Pow-2 shape bucket: one tuned entry covers nearby shapes."""
+    return 1 << max(0, (x - 1).bit_length())
+
+
+def cache_key(op: str, rows: int, cols: int, dtype, backend: str) -> str:
+    return "|".join((op, f"r{_bucket(rows)}", f"c{_bucket(cols)}",
+                     str(jax.numpy.dtype(dtype)), backend))
+
+
+def load_cache(path: str | None = None, *, force: bool = False) -> dict:
+    """Loads (and memoizes per path) the JSON cache; missing file => {}."""
+    p = cache_path(path)
+    with _cache_lock:
+        if not force and p in _caches:
+            return _caches[p]
+        try:
+            with open(p) as f:
+                _caches[p] = json.load(f)
+        except (OSError, ValueError):
+            _caches[p] = {}
+        return _caches[p]
+
+
+def save_cache(path: str | None = None) -> str:
+    p = cache_path(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with _cache_lock:
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(_caches.get(p, {}), f, indent=2, sort_keys=True)
+        os.replace(tmp, p)
+    return p
+
+
+def record_tuned(op: str, rows: int, cols: int, dtype, blocks: tuple[int,
+                                                                     int],
+                 *, backend: str | None = None, meta: dict | None = None,
+                 path: str | None = None, persist: bool = True) -> str:
+    """Stores a tuned block shape; returns the cache key."""
+    backend = backend or jax.default_backend()
+    key = cache_key(op, rows, cols, dtype, backend)
+    p = cache_path(path)
+    load_cache(p)
+    with _cache_lock:
+        _caches[p][key] = dict(block_rows=int(blocks[0]),
+                               block_cols=int(blocks[1]), **(meta or {}))
+    if persist:
+        save_cache(p)
+    return key
+
+
+def lookup_tuned(op: str, rows: int, cols: int, dtype,
+                 *, backend: str | None = None,
+                 path: str | None = None) -> Optional[tuple[int, int]]:
+    backend = backend or jax.default_backend()
+    entry = load_cache(path).get(cache_key(op, rows, cols, dtype, backend))
+    if entry is None:
+        return None
+    return int(entry["block_rows"]), int(entry["block_cols"])
+
+
+# ---------------------------------------------------------------------------
+# Resolution: overrides > autotune cache > heuristic.
+# ---------------------------------------------------------------------------
+def block_shapes(op: str, rows: int, cols: int, dtype=jax.numpy.float32, *,
+                 block_rows: int | None = None, block_cols: int | None = None,
+                 use_cache: bool = False, backend: str | None = None,
+                 cache_file: str | None = None) -> tuple[int, int]:
+    """The canonical block-shape model (every former heuristic collapsed).
+
+    Explicit ``block_rows``/``block_cols`` win (per-axis); otherwise, with
+    ``use_cache=True`` (opt-in: ``SoftmaxPolicy(autotune=True)``), a
+    persisted autotune entry for the bucketed key; otherwise the registered
+    spec's heuristic.  Cache entries are clamped to the tuner's candidate
+    envelope (rows <= row_cap, cols <= 2 * col_cap) so a stale or
+    hand-edited cache can't produce a pathological grid; explicit overrides
+    pass through (alignment-rounded only), matching the former per-site
+    heuristics.
+    """
+    spec = get_spec(op)
+    tuned = None
+    if use_cache and (block_rows is None or block_cols is None):
+        tuned = lookup_tuned(op, rows, cols, dtype, backend=backend,
+                             path=cache_file)
+        if tuned is not None:
+            # Clamp to the candidate envelope AND this shape's own padded
+            # width — a pow-2 bucket neighbor must not inherit a tile wider
+            # than its data (that would inflate padding work).
+            tuned = (min(tuned[0], spec.row_cap,
+                         round_up(rows, spec.row_align)),
+                     min(tuned[1], 2 * spec.col_cap,
+                         round_up(cols, spec.col_align)))
+    hr, hc = spec.heuristic_blocks(rows, cols)
+    br = block_rows if block_rows is not None else (
+        tuned[0] if tuned else hr)
+    bc = block_cols if block_cols is not None else (
+        tuned[1] if tuned else hc)
+    br = max(spec.row_align, round_up(br, spec.row_align))
+    bc = max(spec.col_align, round_up(bc, spec.col_align))
+    return br, bc
+
+
+def candidate_blocks(op: str, rows: int, cols: int, *,
+                     vmem_budget_bytes: int = 4 << 20) -> list[tuple[int,
+                                                                     int]]:
+    """Autotune sweep candidates: aligned tiles around the heuristic point,
+    bounded by a double-buffered f32 working-set budget."""
+    spec = get_spec(op)
+    row_opts = sorted({max(spec.row_align, min(spec.row_cap, r))
+                       for r in (8, 16, 32, 64, 128, 256,
+                                 round_up(rows, spec.row_align))})
+    col_opts = sorted({max(spec.col_align, min(spec.col_cap * 2, c))
+                       for c in (128, 256, 512, 1024, 2048, 4096,
+                                 round_up(cols, spec.col_align))})
+    cands = []
+    for br in row_opts:
+        if br > round_up(rows, spec.row_align):
+            continue
+        for bc in col_opts:
+            if bc > round_up(cols, spec.col_align):
+                continue
+            if 2 * 4 * br * bc > vmem_budget_bytes:   # 2x double-buffer
+                continue
+            cands.append((br, bc))
+    hr, hc = spec.heuristic_blocks(rows, cols)
+    if (hr, hc) not in cands:
+        cands.append((hr, hc))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# Registered ops.  ``fn`` is filled in lazily by ops.py (kernels import this
+# module, not vice versa, so specs are declared here dependency-free).
+# ---------------------------------------------------------------------------
+register(KernelSpec(name="softmax"))
+register(KernelSpec(name="logsumexp"))
+# fused CE: the former _xent_blocks capped block_v at 2048 unconditionally
+register(KernelSpec(name="xent", full_col_threshold=2048))
+# flash attention: MXU tiles, 128-aligned both axes (rows=Sq, cols=Skv)
+register(KernelSpec(name="flash_attention", row_align=128, row_cap=128,
+                    col_align=128, col_cap=128, full_col_threshold=0))
+
+
+def bind(op: str, fn: Callable) -> None:
+    """Attach the kernel entry point to a registered spec (called by ops)."""
+    _REGISTRY[op] = dataclasses.replace(get_spec(op), fn=fn)

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import numerics, softmax_api
+from repro.core import numerics
+from repro.core.policy import DEFAULT_POLICY, SoftmaxPolicy
 from repro.distributed.autoshard import hint
 from repro.models import layers
 
@@ -139,11 +140,12 @@ def mn_chunk_attention(q, k, v, *, causal, window=None, scale,
 
 
 def full_attention(q, k, v, *, causal, window=None, scale, q_offset=0,
-                   kv_len=None, algorithm="two_pass", use_kernels=False,
+                   kv_len=None, policy: SoftmaxPolicy | None = None,
                    qpos=None):
-    """Single-block grouped attention; softmax via the selectable API (this
+    """Single-block grouped attention; softmax via the SoftmaxPolicy (this
     is where paper Alg 1/2/3 are interchangeable at model level).
     ``qpos`` overrides query positions (traced, for decode)."""
+    policy = policy or DEFAULT_POLICY
     sq, skv = q.shape[3], k.shape[2]
     kv_len = skv if kv_len is None else kv_len
     s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
@@ -152,8 +154,7 @@ def full_attention(q, k, v, *, causal, window=None, scale, q_offset=0,
         qpos = jnp.arange(sq) + q_offset
     mask = _block_mask(qpos, jnp.arange(skv), causal, window, kv_len)
     s = jnp.where(mask[None, None, None], s, NEG_INF)
-    p = softmax_api.softmax(s, axis=-1, algorithm=algorithm,
-                            use_kernel=use_kernels)
+    p = policy.softmax(s, axis=-1)
     return jnp.einsum("bhgqk,bhkd->bhgqd", p,
                       v.astype(jnp.float32)).astype(q.dtype)
 
@@ -173,7 +174,7 @@ def attention_core(q, k, v, *, causal, window, scale, q_offset=0,
         return full_attention(
             q, k, v, causal=causal, window=window, scale=scale,
             q_offset=q_offset, kv_len=kv_len, qpos=qpos,
-            algorithm=cfg.softmax_algorithm, use_kernels=cfg.use_kernels)
+            policy=cfg.softmax_policy())
     return mn_chunk_attention(
         q, k, v, causal=causal, window=window, scale=scale,
         q_offset=q_offset, kv_len=kv_len, n_q_chunks=nq, n_kv_chunks=nkv)

@@ -10,7 +10,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import softmax_api
 
 Params = dict
 
@@ -123,9 +122,10 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 
 
 def softmax_fn(cfg):
-    """The framework-wide softmax entry point bound to a model config."""
+    """The framework-wide softmax entry point bound to a model config
+    (resolved once through the config's SoftmaxPolicy)."""
+    policy = cfg.softmax_policy()
+
     def f(scores, axis=-1):
-        return softmax_api.softmax(scores, axis=axis,
-                                   algorithm=cfg.softmax_algorithm,
-                                   use_kernel=cfg.use_kernels)
+        return policy.softmax(scores, axis=axis)
     return f

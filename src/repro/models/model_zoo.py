@@ -31,9 +31,10 @@ class Model:
         return jax.eval_shape(lambda k: self.init(k), jax.random.PRNGKey(0))
 
     # -- functional entry points -------------------------------------------
-    def loss(self, params, batch, moe_impl: str = "dispatch"):
+    def loss(self, params, batch, moe_impl: str = "dispatch", policy=None):
         return transformer.train_loss(params, batch, cfg=self.cfg,
-                                      tp=self.tp, moe_impl=moe_impl)
+                                      tp=self.tp, moe_impl=moe_impl,
+                                      policy=policy)
 
     def forward(self, params, tokens, **kw):
         return transformer.forward(params, tokens, cfg=self.cfg, tp=self.tp,

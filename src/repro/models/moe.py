@@ -1,7 +1,7 @@
 """Mixture-of-Experts layer (deepseek-v2-lite, granite-moe).
 
-The router is a softmax over experts — a paper-technique site: it routes
-through ``core.softmax_api`` (Alg 1/2/3 selectable).
+The router is a softmax over experts — a paper-technique site: it resolves
+through the config's ``SoftmaxPolicy`` (Alg 1/2/3 + kernel switch).
 
 Two dispatch implementations, selectable per config (also a §Perf lever):
 
@@ -22,7 +22,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import softmax_api
 from repro.models import layers
 
 Params = dict
@@ -51,11 +50,14 @@ def init_moe(key, cfg: ModelConfig, dtype) -> Params:
 
 
 def _router(p, x, cfg: ModelConfig):
-    """Top-k routing probabilities.  x: [B, S, d] -> (weights, idx) [B,S,k]."""
+    """Top-k routing probabilities.  x: [B, S, d] -> (weights, idx) [B,S,k].
+
+    Routes through the config's SoftmaxPolicy, so the router honors both
+    the algorithm AND the kernel switch (``use_kernels`` was previously
+    dropped here, locking routers out of the Pallas path)."""
     m = cfg.moe
     logits = x.astype(jnp.float32) @ p["router"]["w"]
-    probs = softmax_api.softmax(logits, axis=-1,
-                                algorithm=cfg.softmax_algorithm)
+    probs = cfg.softmax_policy().softmax(logits, axis=-1)
     w, idx = jax.lax.top_k(probs, m.top_k)
     w = w / jnp.sum(w, axis=-1, keepdims=True)        # renormalize top-k
     return w.astype(x.dtype), idx, probs

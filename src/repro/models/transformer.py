@@ -22,7 +22,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import twopass
 from repro.distributed.autoshard import hint
 from repro.models import attention as attn_mod
 from repro.models import hybrid as hybrid_mod
@@ -294,10 +293,15 @@ def _head_w(params: Params, cfg: ModelConfig):
 
 
 def lm_loss_from_hidden(params: Params, h, labels, *, cfg: ModelConfig,
-                        n_chunks: int = 8, mask=None):
+                        n_chunks: int = 8, mask=None, policy=None):
     """mean CE over tokens.  h: [B, S, d]; labels: [B, S] (padded vocab ids
     are never produced by data pipeline; padded logit columns are finite but
-    only reachable via labels, so they never contribute)."""
+    only reachable via labels, so they never contribute).
+
+    The per-chunk CE resolves through the SoftmaxPolicy: the jnp path is
+    one (m, n) logsumexp pass; with ``use_kernels`` the fused Pallas CE
+    kernel (fwd = pass 1, bwd = pass 2, custom_vjp) runs instead."""
+    policy = policy or cfg.softmax_policy()
     b, s, d = h.shape
     w = _head_w(params, cfg).astype(h.dtype)
     n_chunks = min(n_chunks, s)
@@ -314,10 +318,8 @@ def lm_loss_from_hidden(params: Params, h, labels, *, cfg: ModelConfig,
         logits = (hc.reshape(tc, d) @ w_).astype(jnp.float32)
         logits = hint(logits.reshape(hc.shape[0], hc.shape[1], -1),
                       "dp", None, "tp").reshape(tc, -1)
-        lse = twopass.twopass_logsumexp(logits, axis=-1)   # one (m,n) pass
-        ll = jnp.take_along_axis(logits, labc.reshape(tc)[:, None],
-                                 axis=-1)[:, 0]
-        return (lse - ll).reshape(hc.shape[0], hc.shape[1])
+        ce = policy.cross_entropy(logits, labc.reshape(tc))
+        return ce.reshape(hc.shape[0], hc.shape[1])
 
     total = jnp.float32(0.0)
     count = jnp.float32(0.0)
@@ -342,14 +344,15 @@ def lm_logits(params: Params, h, *, cfg: ModelConfig):
 
 
 def train_loss(params: Params, batch: dict, *, cfg: ModelConfig,
-               tp: int = 1, moe_impl: str = "dispatch"):
-    """Next-token CE for every family (whisper: decoder CE given frames)."""
+               tp: int = 1, moe_impl: str = "dispatch", policy=None):
+    """Next-token CE for every family (whisper: decoder CE given frames).
+    ``policy`` overrides the config's SoftmaxPolicy for the fused CE."""
     if cfg.family == "encdec":
         enc = encode(params, batch["frames"], cfg=cfg, tp=tp)
         hd = decode_with_encoder(params, enc, batch["dec_tokens"][:, :-1],
                                  cfg=cfg, tp=tp)
         return lm_loss_from_hidden(params, hd, batch["dec_tokens"][:, 1:],
-                                   cfg=cfg)
+                                   cfg=cfg, policy=policy)
     tokens = batch["tokens"]
     patches = batch.get("patches")
     h = forward(params, tokens[:, :-1], cfg=cfg, tp=tp, patches=patches,
@@ -358,4 +361,4 @@ def train_loss(params: Params, batch: dict, *, cfg: ModelConfig,
     if cfg.family == "vlm" and patches is not None:
         h = h[:, patches.shape[1]:]                 # loss on text tail only
     return lm_loss_from_hidden(params, h, labels, cfg=cfg,
-                               mask=batch.get("mask"))
+                               mask=batch.get("mask"), policy=policy)

@@ -2,8 +2,8 @@
 
 ``decode_step`` is the function the decode_* dry-run cells lower: one new
 token against a KV cache of ``seq_len``.  The layer loop is a ``lax.scan``
-over (stacked params, stacked cache).  Sampling uses the paper's two-pass
-softmax (the sampler is a softmax site).
+over (stacked params, stacked cache).  Sampling is a softmax site: it
+resolves through the config's SoftmaxPolicy (algorithm + kernel switch).
 """
 
 from __future__ import annotations
@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import softmax_api, twopass
+from repro.core.policy import DEFAULT_POLICY, SoftmaxPolicy
 from repro.models import layers, transformer
 from repro.serving import kv_cache
 
@@ -157,13 +157,18 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
 
 
 def sample_token(logits, key, temperature: float = 1.0, *,
-                 cfg: ModelConfig | None = None, vocab: int | None = None):
-    """Temperature sampling through the Two-Pass softmax (sampler site)."""
+                 cfg: ModelConfig | None = None, vocab: int | None = None,
+                 policy: SoftmaxPolicy | None = None):
+    """Temperature sampling (sampler site).  Resolves through the config's
+    SoftmaxPolicy — previously hardcoded to the jnp two-pass form, ignoring
+    ``softmax_algorithm``/``use_kernels``."""
+    if policy is None:
+        policy = cfg.softmax_policy() if cfg is not None else DEFAULT_POLICY
     v = vocab or logits.shape[-1]
     logits = logits[..., :v].astype(jnp.float32)
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1)
-    probs = twopass.twopass_softmax(logits / temperature)
+    probs = policy.softmax(logits / temperature, axis=-1)
     return jax.random.categorical(key, jnp.log(probs + 1e-30), axis=-1)
 
 
@@ -178,11 +183,12 @@ def generate(params, prompt, *, cfg: ModelConfig, steps: int, key,
     toks = []
     pos = s
     step_fn = jax.jit(functools.partial(decode_step, cfg=cfg, tp=tp))
-    tok = sample_token(logits, key, temperature, vocab=cfg.vocab)
+    tok = sample_token(logits, key, temperature, cfg=cfg, vocab=cfg.vocab)
     for i in range(steps):
         toks.append(tok)
         key, sub = jax.random.split(key)
         logits, cache = step_fn(params, cache, tok, pos + i)
-        tok = sample_token(logits, sub, temperature, vocab=cfg.vocab)
+        tok = sample_token(logits, sub, temperature, cfg=cfg,
+                           vocab=cfg.vocab)
     toks.append(tok)
     return jnp.stack(toks, axis=1)

@@ -22,11 +22,16 @@ from repro.training.train_state import TrainState
 def make_train_step(model: Model, *, lr_schedule: Callable | None = None,
                     microbatches: int = 1, grad_compression: str = "none",
                     moe_impl: str = "dispatch",
-                    max_grad_norm: float | None = 1.0):
+                    max_grad_norm: float | None = 1.0,
+                    softmax_policy=None):
+    """``softmax_policy`` (a ``repro.core.policy.SoftmaxPolicy``) overrides
+    the model config's policy for the fused-CE loss — the training-side
+    resolution point for the paper's algorithm/kernel/block knobs."""
     lr_fn = lr_schedule or functools.partial(schedules.warmup_cosine)
+    policy = softmax_policy or model.cfg.softmax_policy()
 
     def loss_fn(params, batch):
-        return model.loss(params, batch, moe_impl=moe_impl)
+        return model.loss(params, batch, moe_impl=moe_impl, policy=policy)
 
     def train_step(state: TrainState, batch: dict):
         if microbatches > 1:

@@ -32,6 +32,7 @@ def _batch_for(model, key, batch=2, seq=17):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch):
     """One loss+grad step on the reduced config: finite, right scale."""

@@ -75,6 +75,7 @@ class TestCheckpointer:
 
 
 class TestCrashResume:
+    @pytest.mark.slow
     def test_resume_reproduces_uninterrupted_run(self, tmp_path):
         """Train 6 steps straight vs train 3 + crash + resume 3: identical
         final loss (exactly-once data + checkpointed optimizer state)."""

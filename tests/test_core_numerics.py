@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare jax+pytest env
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import numerics, twopass
 from repro.core.numerics import ExtFloat, ext_add, ext_exp, ext_sum, ext_zero
@@ -218,9 +221,14 @@ class TestShardedCombine:
         # 1-device mesh.
         from jax.sharding import Mesh, PartitionSpec as P
 
+        try:
+            shard_map = jax.shard_map            # jax >= 0.5
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map
+
         mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 256)) * 10
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda xl: twopass.twopass_softmax_sharded(xl, "model"),
             mesh=mesh, in_specs=P(None, "model"), out_specs=P(None, "model"))
         np.testing.assert_allclose(np.asarray(fn(x)),

@@ -48,6 +48,7 @@ class TestShardingRules:
         """)
         assert "ALL_OK" in out
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("kind", ["train", "decode", "prefill"])
     def test_cells_compile_on_small_mesh(self, kind):
         """The dry-run machinery end-to-end on a (2,4) mesh with reduced
@@ -153,6 +154,7 @@ class TestRooflineMath:
 
 
 class TestSeqParallelDecode:
+    @pytest.mark.slow
     def test_decode_seq_parallel_matches_baseline(self):
         """Sequence-parallel decode (cache seq over model + replicated
         q-heads) must produce identical logits to the baseline layout —

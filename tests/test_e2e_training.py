@@ -15,6 +15,8 @@ from repro.models import build_model
 from repro.optim import schedules
 from repro.training import step_fn, train_state
 
+pytestmark = pytest.mark.slow          # multi-minute training loops
+
 
 def _train(model, steps=20, lr=5e-3, seed=0):
     params = model.init(jax.random.PRNGKey(seed))

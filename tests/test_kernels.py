@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare jax+pytest env
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.softmax_api import SoftmaxAlgorithm
 from repro.kernels import ops, ref

@@ -12,6 +12,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 class TestRingSWA:
+    @pytest.mark.slow
     def test_ring_decode_matches_full_window(self):
         """Decoding with the window-sized ring buffer == decoding with a
         full-length cache (window masking), past the wrap point."""

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare jax+pytest env
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_config
 from repro.configs.base import ShapeCell
@@ -120,6 +123,7 @@ class TestMoE:
 
 
 class TestSSMCores:
+    @pytest.mark.slow
     @given(st.integers(2, 5), st.integers(4, 24))
     @settings(max_examples=10, deadline=None)
     def test_ssd_chunked_matches_step_recurrence(self, b, s):
@@ -141,6 +145,7 @@ class TestSSMCores:
         np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(ref),
                                    atol=2e-4)
 
+    @pytest.mark.slow
     @given(st.integers(2, 3), st.integers(4, 20))
     @settings(max_examples=10, deadline=None)
     def test_wkv6_chunked_matches_step_recurrence(self, b, s):
