@@ -5,7 +5,6 @@ sequence lengths (the long-context motivation)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.models import attention as A

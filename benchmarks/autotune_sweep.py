@@ -14,21 +14,34 @@ are not a TPU performance artifact — the sweep demonstrates the tuning
 
 from __future__ import annotations
 
+import argparse
 import os
 
 from benchmarks.common import emit
 from repro.kernels import autotune, registry
 
-# (op, rows, cols): LM-head vocab rows, long softmax rows, fused-CE tile
+# (op, rows, cols): LM-head vocab rows, long softmax rows, fused-CE tile,
+# attention tiles (rows/cols = Sq/Skv for the attention ops)
 SHAPES = (
     ("softmax", 64, 4096),
     ("softmax", 8, 16384),
     ("xent", 128, 4096),
+    ("flash_attention", 128, 256),
+    ("chunk_attention", 2048, 2048),
 )
 
 FAST_SHAPES = (
     ("softmax", 16, 1024),
     ("xent", 32, 512),
+    ("flash_attention", 128, 128),
+    ("chunk_attention", 256, 512),
+)
+
+# CI smoke: one candidate apiece — proves sweep/persist/hit without timing
+SMOKE_SHAPES = (
+    ("softmax", 8, 256),
+    ("flash_attention", 128, 128),
+    ("chunk_attention", 256, 256),
 )
 
 
@@ -55,5 +68,30 @@ def run(shapes=None, cache_file: str | None = None, reps: int = 3,
     return emit(rows)
 
 
+def scratch_cache() -> str:
+    """A throwaway cache path: smoke runs must not clobber the real cache
+    with 1-rep timings."""
+    import tempfile
+
+    return os.path.join(tempfile.mkdtemp(prefix="repro_autotune_smoke_"),
+                        "autotune.json")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny shapes, 1 rep (CI rot check; writes to a "
+                        "scratch cache unless --cache is given)")
+    p.add_argument("--fast", action="store_true", help="reduced shape grid")
+    p.add_argument("--cache", default=None, help="autotune cache file")
+    args = p.parse_args(argv)
+    if args.smoke:
+        run(shapes=SMOKE_SHAPES, cache_file=args.cache or scratch_cache(),
+            reps=1, min_time_s=0.005)
+    else:
+        run(shapes=FAST_SHAPES if args.fast else None,
+            cache_file=args.cache)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -16,8 +16,28 @@ import jax
 import numpy as np
 
 
-def time_fn(fn, *args, min_time_s: float = 0.2, reps: int = 7) -> float:
+# Timing defaults; ``benchmarks.run --smoke`` drops them to one quick rep so
+# every benchmark module stays executable in CI without burning minutes.
+REPS = 7
+MIN_TIME_S = 0.2
+_SMOKE = False
+
+
+def smoke_mode() -> None:
+    """Switch the module-wide timing protocol to 1 rep / minimal wall time.
+    Overrides benchmarks' explicit per-call reps/min_time_s too — smoke is
+    a rot check, not a measurement."""
+    global REPS, MIN_TIME_S, _SMOKE
+    REPS, MIN_TIME_S, _SMOKE = 1, 0.01, True
+
+
+def time_fn(fn, *args, min_time_s: float | None = None,
+            reps: int | None = None) -> float:
     """Median seconds/call over ``reps`` measurements (paper protocol)."""
+    if _SMOKE or min_time_s is None:
+        min_time_s = MIN_TIME_S
+    if _SMOKE or reps is None:
+        reps = REPS
     fn(*args)                                     # compile + warm
     jax.block_until_ready(fn(*args))
     medians = []

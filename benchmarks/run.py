@@ -25,36 +25,61 @@ def main() -> None:
                    help="comma list of bench names to run")
     p.add_argument("--fast", action="store_true",
                    help="smaller grids (CI mode)")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny shapes, 1 rep: a rot check that every "
+                        "benchmark module still imports and executes")
     args = p.parse_args()
 
     from benchmarks import (attention_stream, autotune_sweep, batched_rows,
-                            fused_xent, library_comparison, memory_traffic,
-                            pass_decomposition, softmax_sweep)
+                            common, fused_xent, library_comparison,
+                            memory_traffic, pass_decomposition, softmax_sweep)
 
-    benches = {
-        "softmax_sweep": lambda: softmax_sweep.run(
-            sizes=[2 ** 14, 2 ** 20] if args.fast else None),
-        "pass_decomposition": lambda: pass_decomposition.run(
-            n=2 ** 20 if args.fast else 8 * 2 ** 20),
-        "memory_traffic": memory_traffic.run,
-        "library_comparison": lambda: library_comparison.run(
-            sizes=[2 ** 20] if args.fast else None),
-        "batched_rows": lambda: batched_rows.run(
-            rows_per_batch=8 if args.fast else 64),
-        "fused_xent": lambda: fused_xent.run(
-            t=32 if args.fast else 256,
-            vocabs=(49152,) if args.fast else (49152, 152064)),
-        "attention_stream": lambda: attention_stream.run(
-            seqs=(1024,) if args.fast else (1024, 4096, 8192)),
-        "autotune_sweep": lambda: autotune_sweep.run(
-            shapes=autotune_sweep.FAST_SHAPES if args.fast else None),
+    # One table, three grids per bench: (full_kwargs, fast_kwargs,
+    # smoke_kwargs).  A single dict means a new benchmark can't be added to
+    # the normal run while silently escaping the CI smoke job (or vice
+    # versa).
+    grids = {
+        "softmax_sweep": (
+            softmax_sweep.run,
+            dict(), dict(sizes=[2 ** 14, 2 ** 20]), dict(sizes=[2 ** 12])),
+        "pass_decomposition": (
+            pass_decomposition.run,
+            dict(n=8 * 2 ** 20), dict(n=2 ** 20), dict(n=2 ** 14)),
+        "memory_traffic": (
+            memory_traffic.run, dict(), dict(), dict(n=2 ** 16)),
+        "library_comparison": (
+            library_comparison.run,
+            dict(), dict(sizes=[2 ** 20]), dict(sizes=[2 ** 12])),
+        "batched_rows": (
+            batched_rows.run,
+            dict(rows_per_batch=64), dict(rows_per_batch=8),
+            dict(rows_per_batch=2)),
+        "fused_xent": (
+            fused_xent.run,
+            dict(t=256, vocabs=(49152, 152064)),
+            dict(t=32, vocabs=(49152,)), dict(t=8, vocabs=(2048,))),
+        "attention_stream": (
+            attention_stream.run,
+            dict(seqs=(1024, 4096, 8192)), dict(seqs=(1024,)),
+            dict(seqs=(128,))),
+        "autotune_sweep": (
+            autotune_sweep.run,
+            dict(), dict(shapes=autotune_sweep.FAST_SHAPES),
+            dict(shapes=autotune_sweep.SMOKE_SHAPES, reps=1,
+                 min_time_s=0.005)),
     }
+    if args.smoke:
+        common.smoke_mode()
+        # smoke must not clobber real tuned entries with 1-rep timings
+        grids["autotune_sweep"][3]["cache_file"] = \
+            autotune_sweep.scratch_cache()
+    grid_idx = 3 if args.smoke else (2 if args.fast else 1)
     only = set(args.only.split(",")) if args.only else None
-    for name, fn in benches.items():
+    for name, entry in grids.items():
         if only and name not in only:
             continue
         print(f"# === {name} ===", file=sys.stderr)
-        fn()
+        entry[0](**entry[grid_idx])
 
 
 if __name__ == "__main__":

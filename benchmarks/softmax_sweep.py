@@ -9,7 +9,6 @@ memory-bound, which is the paper's central claim.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import SIZES, emit, time_fn
 from repro.core.softmax_api import SoftmaxAlgorithm, softmax

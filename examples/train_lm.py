@@ -8,8 +8,6 @@ Run: PYTHONPATH=src python examples/train_lm.py [--steps 200]
 import argparse
 import logging
 
-import jax
-
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models.model_zoo import Model
 from repro.training.trainer import Trainer, TrainerConfig

@@ -1,8 +1,32 @@
 #!/usr/bin/env bash
-# Fast deterministic CI subset: the tier-1 command minus tests marked `slow`
-# (multi-minute e2e training loops / compile-heavy mesh lowering).  Full
-# tier-1 remains `PYTHONPATH=src python -m pytest -x -q`.
+# Fast deterministic CI subset: lint + the tier-1 command minus tests marked
+# `slow` (multi-minute e2e training loops / compile-heavy mesh lowering).
+# Full tier-1 remains `PYTHONPATH=src python -m pytest -x -q`.
+# Run by .github/workflows/ci.yml so local and CI runs match exactly.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Lint (config in pyproject.toml).  CI installs ruff; locally we skip with a
+# warning rather than fail on envs that only have jax+pytest.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "warning: ruff not installed; skipping lint" >&2
+fi
+
+# Guard against a silently-green run: an import failure or a wrong
+# PYTHONPATH makes pytest collect 0 tests and exit 0 under some flag
+# combinations.  Fail loudly instead.
+if ! python -c "import repro" 2>/dev/null; then
+    echo "error: 'import repro' failed — PYTHONPATH=src not effective?" >&2
+    exit 1
+fi
+collected=$(python -m pytest -m "not slow" --co -q 2>/dev/null | grep -c '::' || true)
+if [ "${collected}" -eq 0 ]; then
+    echo "error: pytest collected 0 tests (broken testpaths or markers?)" >&2
+    exit 1
+fi
+echo "collected ${collected} tests (not slow)"
+
 exec python -m pytest -q -m "not slow" "$@"

@@ -80,6 +80,8 @@ class ModelConfig:
     softmax_block_cols: Optional[int] = None
     softmax_autotune: bool = False           # consult persisted tune cache
     softmax_autotune_cache: Optional[str] = None
+    attn_block_q: Optional[int] = None       # flash block_q / q-chunk length
+    attn_block_k: Optional[int] = None       # flash block_k / kv-chunk length
     # decode parallelism: shard the KV-cache SEQUENCE over the model axis and
     # replicate q-heads — each shard attends its chunk, the (m, n) partial
     # combine restores exactness (DESIGN SS2.4).  Perf lever for GQA archs

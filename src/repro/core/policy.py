@@ -32,6 +32,11 @@ from repro.core import twopass
 from repro.core.softmax_api import _ALGOS, SoftmaxAlgorithm
 
 
+# ops whose block axes are (Sq, Skv) rather than (rows, cols) of a softmax
+# operand; they take the attention-specific overrides below.
+ATTENTION_OPS = ("flash_attention", "chunk_attention")
+
+
 @dataclass(frozen=True)
 class SoftmaxPolicy:
     algorithm: SoftmaxAlgorithm = SoftmaxAlgorithm.TWO_PASS
@@ -40,6 +45,12 @@ class SoftmaxPolicy:
     block_cols: Optional[int] = None
     autotune: bool = False               # consult the persisted tune cache
     autotune_cache: Optional[str] = None  # cache file (None = env/default)
+    # attention tiling overrides: flash block_q/block_k, or the chunked
+    # path's q/kv chunk lengths.  Separate from block_rows/cols because an
+    # attention tile and a softmax-operand tile are different quantities —
+    # one policy may pin both independently.
+    attn_block_q: Optional[int] = None
+    attn_block_k: Optional[int] = None
 
     def __post_init__(self):
         # accept plain strings from configs ("two_pass", ...)
@@ -56,21 +67,34 @@ class SoftmaxPolicy:
             block_rows=getattr(cfg, "softmax_block_rows", None),
             block_cols=getattr(cfg, "softmax_block_cols", None),
             autotune=getattr(cfg, "softmax_autotune", False),
-            autotune_cache=getattr(cfg, "softmax_autotune_cache", None))
+            autotune_cache=getattr(cfg, "softmax_autotune_cache", None),
+            attn_block_q=getattr(cfg, "attn_block_q", None),
+            attn_block_k=getattr(cfg, "attn_block_k", None))
 
     def replace(self, **kw) -> "SoftmaxPolicy":
         return dataclasses.replace(self, **kw)
 
     # -- block resolution ----------------------------------------------------
+    def _overrides_for(self, op: str) -> tuple[Optional[int], Optional[int]]:
+        if op in ATTENTION_OPS:
+            return self.attn_block_q, self.attn_block_k
+        return self.block_rows, self.block_cols
+
     def resolve_blocks(self, op: str, rows: int, cols: int,
-                       dtype=jnp.float32) -> tuple[int, int]:
-        """Registry resolution: overrides > (autotune cache) > heuristic."""
+                       dtype=jnp.float32, *,
+                       block_rows: Optional[int] = None,
+                       block_cols: Optional[int] = None) -> tuple[int, int]:
+        """Registry resolution: explicit args > this policy's overrides >
+        (autotune cache) > heuristic.  Attention ops take the policy's
+        ``attn_block_q``/``attn_block_k`` rather than the softmax tile."""
         from repro.kernels import registry  # lazy: kernels are optional
 
+        pbr, pbc = self._overrides_for(op)
         return registry.block_shapes(
-            op, rows, cols, dtype, block_rows=self.block_rows,
-            block_cols=self.block_cols, use_cache=self.autotune,
-            cache_file=self.autotune_cache)
+            op, rows, cols, dtype,
+            block_rows=block_rows if block_rows is not None else pbr,
+            block_cols=block_cols if block_cols is not None else pbc,
+            use_cache=self.autotune, cache_file=self.autotune_cache)
 
     def tune(self, op: str, rows: int, cols: int, dtype=jnp.float32, **kw):
         """Eagerly autotune one (op, shape) and persist it to this policy's

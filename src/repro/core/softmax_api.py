@@ -17,8 +17,6 @@ module dispatches to when ``use_kernel=True``.
 from __future__ import annotations
 
 import enum
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,6 @@ same math with explicit HBM->VMEM tiling and are verified against this module.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -61,6 +61,10 @@ def _median_time(fn: Callable, *args, reps: int = 3,
     return meds[len(meds) // 2]
 
 
+ATTN_HEAD_DIM = 64       # fixed proxy head dim for attention sweeps
+ATTN_HEADS = 2           # small head count keeps interpret-mode sweeps cheap
+
+
 def _runner_for(op: str) -> Callable:
     """(x..., br, bc) -> timed callable for one op at fixed blocks.  Block
     overrides are passed explicitly so the sweep bypasses the cache."""
@@ -77,12 +81,48 @@ def _runner_for(op: str) -> Callable:
             logits, labels = args
             return ops.cross_entropy(logits, labels, br, bc)
         return run
+    if op == "flash_attention":
+        def run(args, br, bc):
+            q, k, v = args
+            return ops.flash_attention(q, k, v, True, None, None, br, bc)
+        return run
+    if op == "chunk_attention":
+        # chunked-jnp path: blocks are chunk LENGTHS; counts are the same
+        # ceil-div + unroll clamp models.attention.resolve_chunks applies.
+        from repro.models import attention as A
+
+        jfn = jax.jit(A.mn_chunk_attention,
+                      static_argnames=("causal", "window", "scale",
+                                       "q_offset", "n_q_chunks",
+                                       "n_kv_chunks"))
+
+        def run(args, br, bc):
+            q, k, v = args
+            nq = min(A.MAX_Q_CHUNKS, -(-q.shape[3] // br))
+            nkv = min(A.MAX_KV_CHUNKS, -(-k.shape[2] // bc))
+            return jfn(q, k, v, causal=True,
+                       scale=q.shape[-1] ** -0.5,
+                       n_q_chunks=nq, n_kv_chunks=nkv)
+        return run
     raise ValueError(f"op {op!r} is not autotunable here "
                      f"(registered: {registry.registered_ops()})")
 
 
 def _inputs_for(op: str, rows: int, cols: int, dtype):
     key = jax.random.PRNGKey(0)
+    if op in ("flash_attention", "chunk_attention"):
+        # rows/cols are (Sq, Skv); head dims are fixed proxies — the tile
+        # choice is driven by the sequence axes the grid iterates over.
+        ks = jax.random.split(key, 3)
+        d = ATTN_HEAD_DIM
+        if op == "flash_attention":
+            qs = (1, ATTN_HEADS, rows, d)          # [B, H, Sq, D]
+            kvs = (1, ATTN_HEADS, cols, d)
+        else:
+            qs = (1, ATTN_HEADS, 1, rows, d)       # [B, Hkv, G, Sq, D]
+            kvs = (1, ATTN_HEADS, cols, d)
+        return tuple(jax.random.normal(k_, s).astype(dtype)
+                     for k_, s in zip(ks, (qs, kvs, kvs)))
     x = (jax.random.normal(key, (rows, cols)) * 4).astype(dtype)
     if op == "xent":
         labels = jax.random.randint(jax.random.PRNGKey(1), (rows,), 0, cols)
@@ -139,16 +179,21 @@ def autotune_op(op: str, rows: int, cols: int, dtype=jnp.float32, *,
 
 
 DEFAULT_SWEEP = (
-    # (op, rows, cols): LM-head vocab rows, attention score tiles, long rows
+    # (op, rows, cols): LM-head vocab rows, attention score tiles, long rows.
+    # Attention rows/cols are (Sq, Skv).
     ("softmax", 64, 4096),
     ("softmax", 8, 32768),
     ("xent", 128, 4096),
+    ("flash_attention", 128, 256),
+    ("chunk_attention", 2048, 2048),
 )
 
 
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--op", default=None, help="softmax|logsumexp|xent")
+    p.add_argument("--op", default=None,
+                   help="softmax|logsumexp|xent|flash_attention|"
+                        "chunk_attention (attention rows/cols = Sq/Skv)")
     p.add_argument("--rows", type=int, default=64)
     p.add_argument("--cols", type=int, default=4096)
     p.add_argument("--dtype", default="float32")

@@ -22,11 +22,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.numerics import MINUS_INF_N, exp2_int, ext_exp
+from repro.core.numerics import exp2_int, ext_exp
+from repro.kernels import registry
 from repro.kernels.twopass_softmax import _interpret, _tpu_params
 
-DEFAULT_BLOCK_Q = 128
-DEFAULT_BLOCK_K = 128
 NEG_INF = -jnp.inf
 
 
@@ -92,18 +91,24 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, n_ref, *,
 def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = False, scale: float | None = None,
                         window: int | None = None,
-                        block_q: int = DEFAULT_BLOCK_Q,
-                        block_k: int = DEFAULT_BLOCK_K,
+                        block_q: int | None = None,
+                        block_k: int | None = None,
                         q_len: int | None = None,
                         kv_len: int | None = None) -> jax.Array:
     """Flash attention, q/k/v: [B, H, S, D] (H pre-expanded to q-heads).
 
+    ``block_q``/``block_k`` default to the registry's resolution for
+    ``flash_attention`` (heuristic MXU tile unless overridden/tuned).
     Sq % block_q == Skv % block_k == 0 required (``ops.flash_attention``
     pads; ``q_len``/``kv_len`` are the true pre-padding lengths).
     Returns [B, H, Sq, D] in q.dtype.
     """
     b, h, sq, d = q.shape
     skv = k.shape[2]
+    if block_q is None or block_k is None:
+        rq, rk = registry.block_shapes("flash_attention", sq, skv, q.dtype)
+        block_q = block_q or min(rq, sq)
+        block_k = block_k or min(rk, skv)
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     if q_len is None:

@@ -34,14 +34,9 @@ def _blocks(op: str, rows: int, cols: int, dtype, block_rows, block_cols,
     """Resolve block shapes: explicit args win, then the policy's overrides
     and cache setting, then the registry model."""
     if policy is not None:
-        if block_rows is None:
-            block_rows = policy.block_rows
-        if block_cols is None:
-            block_cols = policy.block_cols
-        return registry.block_shapes(
-            op, rows, cols, dtype, block_rows=block_rows,
-            block_cols=block_cols, use_cache=policy.autotune,
-            cache_file=policy.autotune_cache)
+        return policy.resolve_blocks(op, rows, cols, dtype,
+                                     block_rows=block_rows,
+                                     block_cols=block_cols)
     return registry.block_shapes(op, rows, cols, dtype,
                                  block_rows=block_rows,
                                  block_cols=block_cols)
@@ -158,17 +153,27 @@ cross_entropy.defvjp(_ce_fwd, _ce_bwd)
 # Flash attention (fwd kernel; bwd via the jnp reference formula -- the
 # recompute pass is algorithmically the paper's pass 2, XLA-fused here).
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = False, scale: float | None = None,
-                    window: int | None = None) -> jax.Array:
-    return _flash_fwd_padded(q, k, v, causal, scale, window)
+                    window: int | None = None,
+                    block_q: int | None = None,
+                    block_k: int | None = None,
+                    policy=None) -> jax.Array:
+    """Flash attention with registry-resolved tiles.  ``block_q``/``block_k``
+    are explicit overrides (the autotuner sweeps through them); ``policy``
+    (hashable, safe as a nondiff arg) carries attn overrides + the autotune
+    cache setting."""
+    return _flash_fwd_padded(q, k, v, causal, scale, window, block_q,
+                             block_k, policy)
 
 
-def _flash_fwd_padded(q, k, v, causal, scale, window):
+def _flash_fwd_padded(q, k, v, causal, scale, window, block_q=None,
+                      block_k=None, policy=None):
     b, h, sq, d = q.shape
     skv = k.shape[2]
-    bq, bk = registry.block_shapes("flash_attention", sq, skv, q.dtype)
+    bq, bk = _blocks("flash_attention", sq, skv, q.dtype, block_q, block_k,
+                     policy)
     bq, bk = min(bq, _round_up(sq, 128)), min(bk, _round_up(skv, 128))
     psq, pskv = _round_up(sq, bq), _round_up(skv, bk)
     if psq != sq:
@@ -187,11 +192,12 @@ def _flash_fwd_padded(q, k, v, causal, scale, window):
     return o[:, :, :sq, :]
 
 
-def _flash_fwd(q, k, v, causal, scale, window):
-    return _flash_fwd_padded(q, k, v, causal, scale, window), (q, k, v)
+def _flash_fwd(q, k, v, causal, scale, window, block_q, block_k, policy):
+    return _flash_fwd_padded(q, k, v, causal, scale, window, block_q,
+                             block_k, policy), (q, k, v)
 
 
-def _flash_bwd(causal, scale, window, res, do):
+def _flash_bwd(causal, scale, window, block_q, block_k, policy, res, do):
     q, k, v = res
     _, vjp = jax.vjp(
         lambda q_, k_, v_: _ref.attention_ref(q_, k_, v_, causal=causal,

@@ -49,6 +49,14 @@ class KernelSpec:
             always a ``col_align`` (lane) multiple.
       rows: smallest ``row_align`` (sublane) multiple covering ``rows``,
             clamped to ``[row_align, row_cap]``.
+
+    The tuner may explore past the heuristic caps: ``tune_row_cap`` /
+    ``tune_col_cap`` bound the autotune candidate sweep AND the clamp
+    applied to cache-sourced entries (None falls back to ``row_cap`` /
+    ``2 * col_cap``, the pre-existing envelope).  ``sweep_budget_bytes``
+    is the double-buffered f32 working-set bound for candidates — ops
+    that stream through XLA rather than VMEM (chunk_attention) set it
+    higher than the Pallas default.
     """
     name: str
     fn: Optional[Callable] = None        # 2-D kernel entry point (or None)
@@ -57,6 +65,9 @@ class KernelSpec:
     col_align: int = 128
     col_cap: int = 2048
     full_col_threshold: int = 4096
+    tune_row_cap: Optional[int] = None
+    tune_col_cap: Optional[int] = None
+    sweep_budget_bytes: int = 4 << 20
 
     def heuristic_blocks(self, rows: int, cols: int) -> tuple[int, int]:
         bc = cols if cols <= self.full_col_threshold else self.col_cap
@@ -65,6 +76,11 @@ class KernelSpec:
         br = max(self.row_align,
                  min(self.row_cap, round_up(rows, self.row_align)))
         return br, bc
+
+    def envelope(self) -> tuple[int, int]:
+        """(max rows, max cols) a tuned/candidate block may take."""
+        return (self.tune_row_cap or self.row_cap,
+                self.tune_col_cap or 2 * self.col_cap)
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
@@ -187,10 +203,9 @@ def block_shapes(op: str, rows: int, cols: int, dtype=jax.numpy.float32, *,
             # Clamp to the candidate envelope AND this shape's own padded
             # width — a pow-2 bucket neighbor must not inherit a tile wider
             # than its data (that would inflate padding work).
-            tuned = (min(tuned[0], spec.row_cap,
-                         round_up(rows, spec.row_align)),
-                     min(tuned[1], 2 * spec.col_cap,
-                         round_up(cols, spec.col_align)))
+            er, ec = spec.envelope()
+            tuned = (min(tuned[0], er, round_up(rows, spec.row_align)),
+                     min(tuned[1], ec, round_up(cols, spec.col_align)))
     hr, hc = spec.heuristic_blocks(rows, cols)
     br = block_rows if block_rows is not None else (
         tuned[0] if tuned else hr)
@@ -202,15 +217,17 @@ def block_shapes(op: str, rows: int, cols: int, dtype=jax.numpy.float32, *,
 
 
 def candidate_blocks(op: str, rows: int, cols: int, *,
-                     vmem_budget_bytes: int = 4 << 20) -> list[tuple[int,
-                                                                     int]]:
+                     vmem_budget_bytes: int | None = None) -> list[tuple[int,
+                                                                         int]]:
     """Autotune sweep candidates: aligned tiles around the heuristic point,
-    bounded by a double-buffered f32 working-set budget."""
+    bounded by the spec's double-buffered f32 working-set budget."""
     spec = get_spec(op)
-    row_opts = sorted({max(spec.row_align, min(spec.row_cap, r))
+    budget = vmem_budget_bytes or spec.sweep_budget_bytes
+    er, ec = spec.envelope()
+    row_opts = sorted({max(spec.row_align, min(er, r))
                        for r in (8, 16, 32, 64, 128, 256,
                                  round_up(rows, spec.row_align))})
-    col_opts = sorted({max(spec.col_align, min(spec.col_cap * 2, c))
+    col_opts = sorted({max(spec.col_align, min(ec, c))
                        for c in (128, 256, 512, 1024, 2048, 4096,
                                  round_up(cols, spec.col_align))})
     cands = []
@@ -220,7 +237,7 @@ def candidate_blocks(op: str, rows: int, cols: int, *,
         for bc in col_opts:
             if bc > round_up(cols, spec.col_align):
                 continue
-            if 2 * 4 * br * bc > vmem_budget_bytes:   # 2x double-buffer
+            if 2 * 4 * br * bc > budget:              # 2x double-buffer
                 continue
             cands.append((br, bc))
     hr, hc = spec.heuristic_blocks(rows, cols)
@@ -237,9 +254,22 @@ register(KernelSpec(name="softmax"))
 register(KernelSpec(name="logsumexp"))
 # fused CE: the former _xent_blocks capped block_v at 2048 unconditionally
 register(KernelSpec(name="xent", full_col_threshold=2048))
-# flash attention: MXU tiles, 128-aligned both axes (rows=Sq, cols=Skv)
+# flash attention: MXU tiles, 128-aligned both axes (rows=Sq, cols=Skv).
+# The heuristic stays at the safe (128, 128) MXU tile; the tuner may find
+# larger tiles profitable (fewer accumulator folds per KV sweep), so its
+# envelope extends to 512 on both axes.
 register(KernelSpec(name="flash_attention", row_align=128, row_cap=128,
-                    col_align=128, col_cap=128, full_col_threshold=0))
+                    col_align=128, col_cap=128, full_col_threshold=0,
+                    tune_row_cap=512, tune_col_cap=512))
+# chunked-jnp attention (models.attention.mn_chunk_attention): blocks are
+# CHUNK LENGTHS along (Sq, Skv); chunk counts are the ceil-div of the
+# sequence by the resolved block.  XLA streams the chunks (no VMEM tile),
+# so the sweep budget is wide; 256-alignment keeps the candidate set (and
+# the number of unrolled-loop variants compiled during a sweep) small.
+register(KernelSpec(name="chunk_attention", row_align=256, row_cap=2048,
+                    col_align=256, col_cap=2048, full_col_threshold=2048,
+                    tune_row_cap=2048, tune_col_cap=4096,
+                    sweep_budget_bytes=64 << 20))
 
 
 def bind(op: str, fn: Callable) -> None:

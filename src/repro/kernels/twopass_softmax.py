@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.numerics import MINUS_INF_N, exp2_int, ext_exp
+from repro.core.numerics import exp2_int, ext_exp
 
 DEFAULT_BLOCK_ROWS = 256
 DEFAULT_BLOCK_COLS = 512

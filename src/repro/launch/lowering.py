@@ -26,12 +26,10 @@ import re
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
-from repro.configs.base import ModelConfig, ShapeCell
+from repro.configs.base import ShapeCell
 from repro.distributed import autoshard, sharding
 from repro.models.model_zoo import Model, cell_supported, input_specs
 from repro.serving import engine

@@ -159,22 +159,51 @@ def full_attention(q, k, v, *, causal, window=None, scale, q_offset=0,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
-def _pick_chunks(sq: int, skv: int) -> tuple[int, int]:
-    """Single block while score tiles stay small; else ceil-div into up to
-    8 x 16 chunks (HLO stays compact, tiles stay VMEM-sized)."""
-    if sq * skv <= 2048 * 2048:
+# Unrolled-loop guards: chunk loops are Python-unrolled (see module doc), so
+# counts are capped to keep the traced HLO compact whatever the registry or
+# a hand-edited autotune cache resolves to.
+MAX_Q_CHUNKS = 8
+MAX_KV_CHUNKS = 16
+
+
+# Whole score matrices up to this many elements stay single-block when
+# nothing is tuned/overridden: full_attention honors the SoftmaxPolicy
+# (algorithm choice, Pallas kernels), which the chunked (m, n) path does
+# not, so the policy-honoring path must not silently shrink.
+SINGLE_BLOCK_SCORES = 2048 * 2048
+
+
+def resolve_chunks(sq: int, skv: int, policy: SoftmaxPolicy | None = None,
+                   dtype=jnp.float32) -> tuple[int, int]:
+    """Chunk counts for :func:`mn_chunk_attention` via the kernel registry.
+
+    The registry's ``chunk_attention`` op models CHUNK LENGTHS along
+    (Sq, Skv); resolution runs the standard chain (policy attn overrides >
+    autotune cache > heuristic) and the counts are the ceil-div of the
+    sequence by the resolved length, capped by the unroll guards.  (1, 1)
+    means single-block — attention_core's policy-honoring full_attention
+    path.  Whether to chunk at all is a score-matrix-size (product)
+    question, so absent overrides or an autotune opt-in the per-axis
+    heuristic never chunks matrices under ``SINGLE_BLOCK_SCORES``."""
+    policy = policy or DEFAULT_POLICY
+    bq, bk = policy.resolve_blocks("chunk_attention", sq, skv, dtype)
+    heuristic_only = (policy.attn_block_q is None
+                      and policy.attn_block_k is None
+                      and not policy.autotune)
+    if heuristic_only and sq * skv <= SINGLE_BLOCK_SCORES:
         return 1, 1
-    return min(8, -(-sq // 2048)), min(16, -(-skv // 2048))
+    return (min(MAX_Q_CHUNKS, -(-sq // bq)),
+            min(MAX_KV_CHUNKS, -(-skv // bk)))
 
 
 def attention_core(q, k, v, *, causal, window, scale, q_offset=0,
                    kv_len=None, qpos=None, cfg: ModelConfig):
-    nq, nkv = _pick_chunks(q.shape[3], k.shape[2])
+    policy = cfg.softmax_policy()
+    nq, nkv = resolve_chunks(q.shape[3], k.shape[2], policy, q.dtype)
     if (nq == 1 and nkv == 1) or qpos is not None:
         return full_attention(
             q, k, v, causal=causal, window=window, scale=scale,
-            q_offset=q_offset, kv_len=kv_len, qpos=qpos,
-            policy=cfg.softmax_policy())
+            q_offset=q_offset, kv_len=kv_len, qpos=qpos, policy=policy)
     return mn_chunk_attention(
         q, k, v, causal=causal, window=window, scale=scale,
         q_offset=q_offset, kv_len=kv_len, n_q_chunks=nq, n_kv_chunks=nkv)

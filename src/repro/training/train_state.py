@@ -4,8 +4,6 @@ from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
-
 from repro.optim import adamw
 
 

@@ -10,13 +10,13 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ShapeCell
-from repro.data.pipeline import SyntheticLM, shard_batch
+from repro.data.pipeline import SyntheticLM
 from repro.distributed import autoshard, fault_tolerance, sharding
 from repro.models.model_zoo import Model
 from repro.optim import schedules

@@ -1,0 +1,253 @@
+"""Attention autotuning (ISSUE 2 tentpole): the registry's two attention
+ops — ``flash_attention`` (Pallas block_q/block_k) and ``chunk_attention``
+(the chunked-jnp path's chunk lengths) — swept by ``kernels.autotune``,
+persisted, and honored by resolution; plus the ``_pick_chunks`` fold.
+
+Covers: cache round-trip for both new ops, stale-cache envelope clamping,
+policy attn overrides, and ``mn_chunk_attention`` numerics vs
+``full_attention`` under causal/window/kv_len variants at registry-resolved
+chunk counts.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import SoftmaxPolicy
+from repro.kernels import autotune, ops, ref, registry
+from repro.models import attention as A
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(sq, skv, d=64, hkv=2, g=2, key=KEY):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, hkv, g, sq, d))
+    k = jax.random.normal(ks[1], (1, hkv, skv, d))
+    v = jax.random.normal(ks[2], (1, hkv, skv, d))
+    return q, k, v
+
+
+class TestAutotuneRunners:
+    def test_flash_round_trip(self, tmp_path):
+        cache = str(tmp_path / "tune.json")
+        res = autotune.autotune_op(
+            "flash_attention", 128, 256,
+            candidates=[(128, 128), (128, 256)], reps=1, min_time_s=0.005,
+            cache_file=cache)
+        assert res.best in [(128, 128), (128, 256)]
+        with open(cache) as f:
+            entry = json.load(f)[res.cache_key]
+        assert entry["block_rows"] == res.best[0]
+        assert res.cache_key.startswith("flash_attention|")
+
+        registry.load_cache(cache, force=True)
+        hit = registry.block_shapes("flash_attention", 128, 256,
+                                    use_cache=True, cache_file=cache)
+        assert hit == res.best
+        # policy resolution (resolve()) honors the same entry
+        pol = SoftmaxPolicy(autotune=True, autotune_cache=cache)
+        assert pol.resolve_blocks("flash_attention", 128, 256) == res.best
+
+    def test_chunk_round_trip(self, tmp_path):
+        cache = str(tmp_path / "tune.json")
+        res = autotune.autotune_op(
+            "chunk_attention", 256, 512,
+            candidates=[(256, 256), (256, 512)], reps=1, min_time_s=0.005,
+            cache_file=cache)
+        registry.load_cache(cache, force=True)
+        hit = registry.block_shapes("chunk_attention", 256, 512,
+                                    use_cache=True, cache_file=cache)
+        assert hit == res.best
+        # ... and drives resolve_chunks through an autotune-enabled policy
+        pol = SoftmaxPolicy(autotune=True, autotune_cache=cache)
+        nq, nkv = A.resolve_chunks(256, 512, pol)
+        assert nq == -(-256 // res.best[0])
+        assert nkv == -(-512 // res.best[1])
+
+    def test_default_sweep_covers_attention(self):
+        ops_in_sweep = {op for op, _, _ in autotune.DEFAULT_SWEEP}
+        assert {"flash_attention", "chunk_attention"} <= ops_in_sweep
+
+    def test_unknown_op_still_raises(self):
+        with pytest.raises(ValueError):
+            autotune._runner_for("not_an_op")
+
+
+class TestStaleCacheClamping:
+    def test_flash_entry_clamped_to_envelope(self, tmp_path):
+        """A hand-edited/stale cache entry can't produce a pathological
+        grid: flash tiles clamp to the tune envelope AND the padded seq."""
+        cache = str(tmp_path / "tune.json")
+        registry.record_tuned("flash_attention", 1024, 1024, jnp.float32,
+                              (4096, 8192), path=cache)
+        registry.load_cache(cache, force=True)
+        got = registry.block_shapes("flash_attention", 1024, 1024,
+                                    use_cache=True, cache_file=cache)
+        er, ec = registry.get_spec("flash_attention").envelope()
+        assert got == (er, ec) == (512, 512)
+        # same pow-2 bucket (512, 1024] shares the entry (still clamped)
+        got_small = registry.block_shapes("flash_attention", 640, 640,
+                                          use_cache=True, cache_file=cache)
+        assert got_small == (512, 512)
+        # a different bucket misses and keeps the safe heuristic tile
+        got_miss = registry.block_shapes("flash_attention", 1100, 1100,
+                                         use_cache=True, cache_file=cache)
+        assert got_miss == (128, 128)
+
+    def test_chunk_entry_clamped(self, tmp_path):
+        cache = str(tmp_path / "tune.json")
+        registry.record_tuned("chunk_attention", 4096, 4096, jnp.float32,
+                              (65536, 65536), path=cache)
+        registry.load_cache(cache, force=True)
+        got = registry.block_shapes("chunk_attention", 4096, 4096,
+                                    use_cache=True, cache_file=cache)
+        er, ec = registry.get_spec("chunk_attention").envelope()
+        assert got == (min(er, 4096), min(ec, 4096))
+        # resolve_chunks caps counts even if an absurd tiny entry sneaks in
+        registry.record_tuned("chunk_attention", 65536, 65536, jnp.float32,
+                              (256, 256), path=cache)
+        registry.load_cache(cache, force=True)
+        pol = SoftmaxPolicy(autotune=True, autotune_cache=cache)
+        nq, nkv = A.resolve_chunks(65536, 65536, pol)
+        assert (nq, nkv) == (A.MAX_Q_CHUNKS, A.MAX_KV_CHUNKS)
+
+    def teardown_method(self):
+        registry.load_cache(force=True)
+
+
+class TestChunkFold:
+    def test_pick_chunks_is_gone(self):
+        assert not hasattr(A, "_pick_chunks")
+
+    def test_heuristic_parity(self):
+        # single block while sequences stay small
+        assert A.resolve_chunks(256, 256) == (1, 1)
+        assert A.resolve_chunks(2048, 2048) == (1, 1)
+        # ~2048-length chunks past that, capped by the unroll guards
+        assert A.resolve_chunks(4096, 4096) == (2, 2)
+        assert A.resolve_chunks(10 ** 5, 10 ** 6) == (A.MAX_Q_CHUNKS,
+                                                      A.MAX_KV_CHUNKS)
+
+    def test_small_score_matrices_stay_policy_honoring(self, tmp_path):
+        """One long axis must not silently drop the policy-honoring
+        full_attention path while the whole score matrix is small: absent
+        overrides/autotune the product rule keeps (1, 1)."""
+        assert A.resolve_chunks(4096, 1024) == (1, 1)
+        assert A.resolve_chunks(512, 8192) == (1, 1)
+        # ... but a tuned entry (explicit opt-in) may chunk the same shape
+        cache = str(tmp_path / "tune.json")
+        registry.record_tuned("chunk_attention", 4096, 1024, jnp.float32,
+                              (2048, 1024), path=cache)
+        registry.load_cache(cache, force=True)
+        pol = SoftmaxPolicy(autotune=True, autotune_cache=cache)
+        assert A.resolve_chunks(4096, 1024, pol) == (2, 1)
+        registry.load_cache(force=True)
+
+    def test_policy_overrides_drive_chunks(self):
+        pol = SoftmaxPolicy(attn_block_q=256, attn_block_k=256)
+        assert A.resolve_chunks(512, 1024, pol) == (2, 4)
+        # sub-alignment overrides round up to the 256 chunk grain
+        pol128 = SoftmaxPolicy(attn_block_q=128, attn_block_k=128)
+        assert A.resolve_chunks(512, 512, pol128) == (2, 2)
+
+    @pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                               (False, None)])
+    def test_chunked_matches_full(self, causal, window):
+        """Registry-resolved chunk counts preserve exactness under the
+        masking variants attention_core dispatches with."""
+        q, k, v = _qkv(512, 512)
+        pol = SoftmaxPolicy(attn_block_q=256, attn_block_k=256)
+        nq, nkv = A.resolve_chunks(512, 512, pol)
+        assert (nq, nkv) == (2, 2)
+        full = A.full_attention(q, k, v, causal=causal, window=window,
+                                scale=0.125)
+        chunk = A.mn_chunk_attention(q, k, v, causal=causal, window=window,
+                                     scale=0.125, n_q_chunks=nq,
+                                     n_kv_chunks=nkv)
+        np.testing.assert_allclose(np.asarray(chunk), np.asarray(full),
+                                   atol=2e-5)
+
+    def test_chunked_matches_full_partial_kv(self):
+        """kv_len < Skv (the decode-cache fill pattern) stays exact."""
+        q, k, v = _qkv(512, 512)
+        full = A.full_attention(q, k, v, causal=True, scale=0.125,
+                                kv_len=300)
+        chunk = A.mn_chunk_attention(q, k, v, causal=True, scale=0.125,
+                                     kv_len=300, n_q_chunks=2,
+                                     n_kv_chunks=4)
+        np.testing.assert_allclose(np.asarray(chunk), np.asarray(full),
+                                   atol=2e-5)
+
+    def test_attention_core_config_overrides(self):
+        """attn_block_q/k thread from ModelConfig through attention_core:
+        forcing chunking on a small shape must not change results."""
+        cfg = get_config("granite-20b").reduced()
+        q, k, v = _qkv(512, 512)
+        base = A.attention_core(q, k, v, causal=True, window=None,
+                                scale=0.125, cfg=cfg)
+        forced = dataclasses.replace(cfg, attn_block_q=256, attn_block_k=256)
+        assert A.resolve_chunks(512, 512, forced.softmax_policy()) == (2, 2)
+        chunked = A.attention_core(q, k, v, causal=True, window=None,
+                                   scale=0.125, cfg=forced)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(base),
+                                   atol=2e-5)
+
+
+class TestFlashBlockOverrides:
+    def test_explicit_blocks_match_oracle(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 64))
+        k = jax.random.normal(ks[1], (1, 2, 256, 64))
+        v = jax.random.normal(ks[2], (1, 2, 256, 64))
+        want = ref.attention_ref(q, k, v, causal=True)
+        for bq, bk in ((128, 128), (256, 128), (128, 256), (256, 256)):
+            got = ops.flash_attention(q, k, v, True, None, None, bq, bk)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=2e-5)
+
+    def test_tuned_entry_drives_kernel_via_policy(self, tmp_path):
+        """End-to-end: a persisted flash entry changes the tile the kernel
+        runs with (through ops.flash_attention policy arg) and results stay
+        exact."""
+        cache = str(tmp_path / "tune.json")
+        registry.record_tuned("flash_attention", 256, 256, jnp.float32,
+                              (256, 256), path=cache)
+        registry.load_cache(cache, force=True)
+        pol = SoftmaxPolicy(autotune=True, autotune_cache=cache)
+        assert pol.resolve_blocks("flash_attention", 256, 256) == (256, 256)
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 64))
+        k = jax.random.normal(ks[1], (1, 2, 256, 64))
+        v = jax.random.normal(ks[2], (1, 2, 256, 64))
+        got = ops.flash_attention(q, k, v, True, None, None, None, None, pol)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)
+
+    def teardown_method(self):
+        registry.load_cache(force=True)
+
+
+class TestBenchmarkSmoke:
+    def test_autotune_sweep_smoke_shapes(self, tmp_path):
+        """The CI smoke entry point: sweep, persist, round-trip assert."""
+        from benchmarks import autotune_sweep
+
+        cache = str(tmp_path / "tune.json")
+        rows = autotune_sweep.run(shapes=(("softmax", 8, 256),
+                                          ("chunk_attention", 256, 256)),
+                                  cache_file=cache, reps=1,
+                                  min_time_s=0.005)
+        assert os.path.exists(cache)
+        names = [r[0] for r in rows]
+        assert any("chunk_attention" in n for n in names)
+
+    def teardown_method(self):
+        registry.load_cache(force=True)

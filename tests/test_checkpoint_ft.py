@@ -1,7 +1,5 @@
 """Checkpointing, crash-resume, elastic restore, fault-tolerance units."""
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,8 +9,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ShapeCell
 from repro.distributed import fault_tolerance as ft
 from repro.models import build_model
-from repro.optim import schedules
-from repro.training import step_fn, train_state
+from repro.training import train_state
 from repro.training.trainer import Trainer, TrainerConfig
 
 
@@ -57,8 +54,6 @@ class TestCheckpointer:
     def test_elastic_restore_different_mesh(self, tmp_path):
         """Save unsharded, restore onto a 1-device 'mesh' with specs — the
         code path a 512->256 chip restart takes."""
-        from jax.sharding import PartitionSpec as P
-
         m, state = _tiny_state()
         ck = Checkpointer(tmp_path)
         ck.save(5, state, blocking=True)

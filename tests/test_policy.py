@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.policy import DEFAULT_POLICY, SoftmaxPolicy
+from repro.core.policy import SoftmaxPolicy
 from repro.core.softmax_api import SoftmaxAlgorithm
 from repro.kernels import autotune, ref, registry
 
