@@ -28,6 +28,7 @@ SHAPES = (
     ("xent", 128, 4096),
     ("flash_attention", 128, 256),
     ("chunk_attention", 2048, 2048),
+    ("decode_attention", 8, 4096),     # rows/cols = slots / cache positions
 )
 
 FAST_SHAPES = (
@@ -35,6 +36,7 @@ FAST_SHAPES = (
     ("xent", 32, 512),
     ("flash_attention", 128, 128),
     ("chunk_attention", 256, 512),
+    ("decode_attention", 8, 512),
 )
 
 # CI smoke: one candidate apiece — proves sweep/persist/hit without timing
@@ -42,6 +44,7 @@ SMOKE_SHAPES = (
     ("softmax", 8, 256),
     ("flash_attention", 128, 128),
     ("chunk_attention", 256, 256),
+    ("decode_attention", 8, 256),
 )
 
 

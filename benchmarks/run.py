@@ -10,6 +10,8 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   attention_stream    — beyond-paper: (m,n)-streamed attention memory/time
   autotune_sweep      — beyond-paper: block-shape autotuner, tuned-vs-default
                         (persists winners to the JSON autotune cache)
+  serving_throughput  — beyond-paper: continuous-batching scheduler vs the
+                        static-batch generate loop (req/s, phase tok/s)
 
 Weak-scaling (Fig 8/9) is not reproducible on this 1-core container and is
 covered by the multi-chip roofline analysis instead (EXPERIMENTS.md SSRoofline).
@@ -32,7 +34,8 @@ def main() -> None:
 
     from benchmarks import (attention_stream, autotune_sweep, batched_rows,
                             common, fused_xent, library_comparison,
-                            memory_traffic, pass_decomposition, softmax_sweep)
+                            memory_traffic, pass_decomposition,
+                            serving_throughput, softmax_sweep)
 
     # One table, three grids per bench: (full_kwargs, fast_kwargs,
     # smoke_kwargs).  A single dict means a new benchmark can't be added to
@@ -67,6 +70,12 @@ def main() -> None:
             dict(), dict(shapes=autotune_sweep.FAST_SHAPES),
             dict(shapes=autotune_sweep.SMOKE_SHAPES, reps=1,
                  min_time_s=0.005)),
+        "serving_throughput": (
+            serving_throughput.run,
+            dict(),
+            dict(n_requests=8, slots_list=(4,), max_new=12, max_len=40),
+            dict(n_requests=6, slots_list=(4,), prompt_len=8, max_new=8,
+                 max_len=24)),
     }
     if args.smoke:
         common.smoke_mode()

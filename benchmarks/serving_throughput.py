@@ -1,0 +1,151 @@
+"""Beyond-paper: continuous-batching serving throughput vs slot count.
+
+Decode-time attention is the repo's most bandwidth-bound softmax consumer
+(one query per sequence against its whole KV cache); the Xeon softmax study
+(arXiv:1904.12380) shows these passes stay memory-bound at serving batch
+sizes, so requests/s comes from keeping the batch axis full.  This benchmark
+drives the slot-based scheduler (``repro.serving.scheduler``) over a Poisson
+request stream at several pool sizes and reports:
+
+  * prefill tok/s and decode tok/s separately (the phases have different
+    arithmetic intensity — a single aggregate hides the bound one),
+  * requests/s end to end,
+  * a static-batching baseline: the PR-2 ``engine.generate`` lockstep loop
+    serving the same workload in fixed batches of ``slots`` — every batch
+    decodes until its slowest member finishes, which is exactly the waste
+    continuous batching removes.
+
+CSV rows via benchmarks.common.emit.  ``--smoke`` is the CI serving gate:
+tiny model, 4 slots, 8 decode steps — scheduler regressions fail on PR.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _requests(n, prompt_len, max_new, arrival_rate, vocab, seed=0):
+    from repro.serving.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    arrivals = (np.cumsum(rng.exponential(1.0 / arrival_rate, n))
+                if arrival_rate else np.zeros(n))
+    lo, hi = max(1, max_new // 2), max_new
+    return [Request(rid=i, prompt=tuple(rng.integers(0, vocab, prompt_len)),
+                    max_new_tokens=int(rng.integers(lo, hi + 1)),
+                    arrival_s=float(arrivals[i]))
+            for i in range(n)]
+
+
+def _baseline_generate(model, params, requests, batch, max_len):
+    """Static batching: lockstep prefill+decode in fixed batches of ``batch``
+    (the pre-scheduler serving path), via ``engine.generate_timed`` — the
+    one phase-timed lockstep loop.  Each batch decodes until its slowest
+    member's budget; useful tokens are only what was requested."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving import engine
+
+    cfg = model.cfg
+    plen = len(requests[0].prompt)
+    key = jax.random.PRNGKey(0)
+
+    def one_batch(reqs):
+        prompts = jnp.stack([jnp.asarray(r.prompt, jnp.int32) for r in reqs])
+        if prompts.shape[0] < batch:                  # ragged tail: pad batch
+            pad = jnp.tile(prompts[-1:], (batch - prompts.shape[0], 1))
+            prompts = jnp.concatenate([prompts, pad])
+        steps = max(r.max_new_tokens for r in reqs) - 1
+        _, st = engine.generate_timed(params, prompts, cfg=cfg, steps=steps,
+                                      key=key, tp=model.tp, max_len=max_len)
+        return st
+
+    pre_s = dec_s = 0.0
+    one_batch(requests[:batch])                       # compile + warm
+    for i in range(0, len(requests), batch):
+        st = one_batch(requests[i:i + batch])
+        pre_s += st["prefill_s"]
+        dec_s += st["decode_s"]
+    # same accounting as the scheduler: decode tokens exclude the one
+    # sampled from prefill logits; lockstep over-decoding is the waste.
+    useful = sum(r.max_new_tokens - 1 for r in requests)
+    return dict(prefill_tok_s=plen * len(requests) / max(pre_s, 1e-9),
+                decode_tok_s=useful / max(dec_s, 1e-9),
+                wall_s=pre_s + dec_s)
+
+
+def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
+        slots_list=(1, 4, 8), prompt_len: int = 16, max_new: int = 24,
+        max_len: int = 64, arrival_rate: float | None = None, seed: int = 0):
+    import jax
+
+    from repro.models import build_model
+    from repro.serving.scheduler import Request
+
+    model = build_model(arch, reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    vocab = model.cfg.vocab
+    rows = []
+    for slots in slots_list:
+        eng = model.serving_engine(params, slots=slots, max_len=max_len,
+                                   seed=seed)
+        # warm the jitted prefill + ragged decode step + adopt/free outside
+        # the measurement (max_new >= 2 so at least one decode step runs)
+        eng.run([Request(rid=-1, prompt=tuple(range(prompt_len)),
+                         max_new_tokens=3)])
+        eng.reset_stats()
+        reqs = _requests(n_requests, prompt_len, max_new, arrival_rate,
+                         vocab, seed=seed)
+        eng.run(reqs)
+        th = eng.throughput()
+        base = f"serving/{arch}/slots={slots}/n={n_requests}"
+        rows.append((f"{base}/prefill", round(1e6 / max(
+            th["prefill_tok_s"], 1e-9), 2), f"{th['prefill_tok_s']:.1f}tok/s"))
+        rows.append((f"{base}/decode", round(1e6 / max(
+            th["decode_tok_s"], 1e-9), 2), f"{th['decode_tok_s']:.1f}tok/s"))
+        rows.append((f"{base}/requests", round(th["wall_s"] * 1e6, 2),
+                     f"{th['requests_s']:.2f}req/s"))
+        # static-batching baseline at the same concurrency
+        reqs = _requests(n_requests, prompt_len, max_new, None, vocab,
+                         seed=seed)
+        bl = _baseline_generate(model, params, reqs, slots, max_len)
+        rows.append((f"{base}/static_batch_decode", round(1e6 / max(
+            bl["decode_tok_s"], 1e-9), 2), f"{bl['decode_tok_s']:.1f}tok/s"))
+        speed = th["decode_tok_s"] / max(bl["decode_tok_s"], 1e-9)
+        rows.append((f"{base}/continuous_vs_static", round(speed, 3),
+                     f"{speed:.2f}x"))
+    return emit(rows)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="qwen2.5-14b")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI serving gate: tiny model, 4 slots, 8 steps")
+    p.add_argument("--slots", default=None,
+                   help="comma list of slot counts (default 1,4,8)")
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--max-new", type=int, default=24)
+    p.add_argument("--arrival-rate", type=float, default=None,
+                   help="Poisson arrivals per second (default: all at t=0)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        run(arch=args.arch, n_requests=6, slots_list=(4,), prompt_len=8,
+            max_new=8, max_len=24)
+        return
+    slots = (tuple(int(s) for s in args.slots.split(","))
+             if args.slots else (1, 4, 8))
+    run(arch=args.arch, n_requests=args.requests, slots_list=slots,
+        prompt_len=args.prompt_len, max_new=args.max_new,
+        max_len=args.prompt_len + args.max_new + 8,
+        arrival_rate=args.arrival_rate)
+
+
+if __name__ == "__main__":
+    main()

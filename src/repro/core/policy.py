@@ -32,9 +32,11 @@ from repro.core import twopass
 from repro.core.softmax_api import _ALGOS, SoftmaxAlgorithm
 
 
-# ops whose block axes are (Sq, Skv) rather than (rows, cols) of a softmax
-# operand; they take the attention-specific overrides below.
-ATTENTION_OPS = ("flash_attention", "chunk_attention")
+# ops whose block axes are attention tilings rather than (rows, cols) of a
+# softmax operand; they take the attention-specific overrides below.
+# flash/chunk axes are (Sq, Skv); decode_attention axes are (slots, Skv) —
+# each slot carries exactly one query, so the "q axis" is the slot axis.
+ATTENTION_OPS = ("flash_attention", "chunk_attention", "decode_attention")
 
 
 @dataclass(frozen=True)

@@ -86,6 +86,14 @@ def _runner_for(op: str) -> Callable:
             q, k, v = args
             return ops.flash_attention(q, k, v, True, None, None, br, bc)
         return run
+    if op == "decode_attention":
+        # single-query serving decode: blocks are (slot, kv) chunk lengths;
+        # the wrapper applies the same ceil-div + unroll clamp as serving.
+        def run(args, br, bc):
+            q, k, v, lengths = args
+            return ops.decode_attention(q, k, v, lengths,
+                                        block_s=br, block_t=bc)
+        return run
     if op == "chunk_attention":
         # chunked-jnp path: blocks are chunk LENGTHS; counts are the same
         # ceil-div + unroll clamp models.attention.resolve_chunks applies.
@@ -110,6 +118,19 @@ def _runner_for(op: str) -> Callable:
 
 def _inputs_for(op: str, rows: int, cols: int, dtype):
     key = jax.random.PRNGKey(0)
+    if op == "decode_attention":
+        # rows/cols are (slots, cache positions); mixed-age pool via random
+        # per-slot lengths — the masking work is part of what is timed.
+        ks = jax.random.split(key, 3)
+        d = ATTN_HEAD_DIM
+        q = jax.random.normal(ks[0], (rows, ATTN_HEADS, 1, d)).astype(dtype)
+        k = jax.random.normal(ks[1], (rows, ATTN_HEADS, cols, d)).astype(
+            dtype)
+        v = jax.random.normal(ks[2], (rows, ATTN_HEADS, cols, d)).astype(
+            dtype)
+        lengths = jax.random.randint(jax.random.PRNGKey(1), (rows,), 1,
+                                     cols + 1)
+        return (q, k, v, lengths)
     if op in ("flash_attention", "chunk_attention"):
         # rows/cols are (Sq, Skv); head dims are fixed proxies — the tile
         # choice is driven by the sequence axes the grid iterates over.
@@ -186,6 +207,8 @@ DEFAULT_SWEEP = (
     ("xent", 128, 4096),
     ("flash_attention", 128, 256),
     ("chunk_attention", 2048, 2048),
+    # serving decode: an 8-slot pool against a 4K cache (rows=slots, cols=T)
+    ("decode_attention", 8, 4096),
 )
 
 
@@ -193,7 +216,8 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--op", default=None,
                    help="softmax|logsumexp|xent|flash_attention|"
-                        "chunk_attention (attention rows/cols = Sq/Skv)")
+                        "chunk_attention (rows/cols = Sq/Skv)|"
+                        "decode_attention (rows/cols = slots/Skv)")
     p.add_argument("--rows", type=int, default=64)
     p.add_argument("--cols", type=int, default=4096)
     p.add_argument("--dtype", default="float32")

@@ -209,6 +209,111 @@ def _flash_bwd(causal, scale, window, block_q, block_k, policy, res, do):
 flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 
+# ---------------------------------------------------------------------------
+# Decode attention: single query per slot against a length-masked KV cache
+# (the continuous-batching serving hot path).  Online-softmax accumulation in
+# the paper's (m, n) representation — rescales are exact powers of two — so
+# KV can be consumed in chunks without ever materializing a full softmax row.
+# ---------------------------------------------------------------------------
+MAX_SLOT_CHUNKS = 8          # unrolled-loop guards (chunk loops are Python-
+MAX_T_CHUNKS = 16            # unrolled; counts bound the traced HLO size)
+
+_NEG_INF = -jnp.inf
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window",
+                                             "n_s_chunks", "n_t_chunks"))
+def _decode_attention_chunked(q, k, v, lengths, *, scale: float,
+                              window: int | None, n_s_chunks: int,
+                              n_t_chunks: int):
+    """(m, n)-streamed single-query attention.  See :func:`decode_attention`
+    for shapes.  ``lengths`` is traced (per-slot cache fill); chunk loops are
+    Python-unrolled, so no chunk can be pruned at trace time."""
+    from repro.core import numerics
+
+    s, hkv, g, d = q.shape
+    t = k.shape[2]
+    dv = v.shape[3]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    lens = lengths.astype(jnp.int32)
+
+    sc = -(-s // n_s_chunks)
+    tc = -(-t // n_t_chunks)
+    outs = []
+    for i in range(n_s_chunks):
+        q_blk = qf[i * sc:(i + 1) * sc]
+        bs = q_blk.shape[0]
+        if bs == 0:
+            continue
+        l_blk = lens[i * sc:i * sc + bs]                  # [bs]
+        o_acc = jnp.zeros((bs, hkv, g, dv), jnp.float32)
+        m_acc = jnp.zeros((bs, hkv, g, 1), jnp.float32)
+        n_acc = jnp.full((bs, hkv, g, 1), numerics.MINUS_INF_N)
+        for j in range(n_t_chunks):
+            lo, hi = j * tc, min(t, (j + 1) * tc)
+            if lo >= hi:
+                continue
+            sco = jnp.einsum("shgd,shtd->shgt", q_blk,
+                             kf[i * sc:i * sc + bs, :, lo:hi]) * scale
+            kpos = jnp.arange(lo, hi)
+            # The slot's query sits at position lens-1 (write-then-attend),
+            # so the validity prefix IS the causal mask; SWA adds a lower
+            # bound relative to that query position.
+            mask = kpos[None, :] < l_blk[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > l_blk[:, None] - 1 - window
+            sco = jnp.where(mask[:, None, None, :], sco, _NEG_INF)
+
+            m, n = numerics.ext_exp(sco)
+            n_loc = jnp.max(n, axis=-1, keepdims=True)
+            w = m * numerics.exp2_int(n - n_loc)
+            m_loc = jnp.sum(w, axis=-1, keepdims=True)
+            o_loc = jnp.einsum("shgt,shtd->shgd", w,
+                               vf[i * sc:i * sc + bs, :, lo:hi])
+
+            n_new = jnp.maximum(n_acc, n_loc)
+            a_acc = numerics.exp2_int(n_acc - n_new)
+            a_loc = numerics.exp2_int(n_loc - n_new)
+            o_acc = o_acc * a_acc + o_loc * a_loc
+            m_acc = m_acc * a_acc + m_loc * a_loc
+            n_acc = n_new
+        # Fully-masked slots (length 0: a free pool slot) have m_acc == 0;
+        # the max() guard turns their output into exact zeros, not NaN.
+        outs.append(o_acc / jnp.maximum(m_acc, 1e-37))
+    return jnp.concatenate(outs, axis=0).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, scale: float | None = None,
+                     window: int | None = None,
+                     block_s: int | None = None,
+                     block_t: int | None = None,
+                     policy=None) -> jax.Array:
+    """Single-query attention against a length-masked KV cache.
+
+    q: [S, Hkv, G, D] (one query per slot, grouped heads); k: [S, Hkv, T, D];
+    v: [S, Hkv, T, Dv]; lengths: [S] int32 — valid cache prefix per slot
+    (position ``lengths - 1`` holds the slot's own query token; 0 marks a
+    free slot, whose output is exact zeros).  Returns [S, Hkv, G, Dv].
+
+    Registry resolution: rows = S (slots), cols = T (cache positions); the
+    resolved blocks are chunk lengths for the unrolled (m, n) loop, capped
+    by ``MAX_SLOT_CHUNKS``/``MAX_T_CHUNKS``.  ``block_s``/``block_t`` are
+    explicit overrides (what the autotuner sweeps); ``policy`` carries attn
+    overrides + the autotune cache setting.
+    """
+    s, _, _, d = q.shape
+    t = k.shape[2]
+    bs, bt = _blocks("decode_attention", s, t, q.dtype, block_s, block_t,
+                     policy)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    return _decode_attention_chunked(
+        q, k, v, lengths, scale=scale, window=window,
+        n_s_chunks=min(MAX_SLOT_CHUNKS, -(-s // bs)),
+        n_t_chunks=min(MAX_T_CHUNKS, -(-t // bt)))
+
+
 def logsumexp_stats(x: jax.Array, block_rows: int | None = None,
                     block_cols: int | None = None, policy=None):
     """Pass-1 stats (m_sum, n_sum) for 2-D x via the Pallas kernel."""
@@ -228,3 +333,4 @@ registry.bind("softmax", _tp2.twopass_softmax_2d)
 registry.bind("logsumexp", _tp2.twopass_stats_2d)
 registry.bind("xent", _xent.xent_fwd_2d)
 registry.bind("flash_attention", _fa.flash_attention_gqa)
+registry.bind("decode_attention", _decode_attention_chunked)

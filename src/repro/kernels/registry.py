@@ -270,6 +270,20 @@ register(KernelSpec(name="chunk_attention", row_align=256, row_cap=2048,
                     col_align=256, col_cap=2048, full_col_threshold=2048,
                     tune_row_cap=2048, tune_col_cap=4096,
                     sweep_budget_bytes=64 << 20))
+# decode attention (ops.decode_attention): single-query attention against a
+# length-masked slot-major KV cache (continuous-batching decode).  rows =
+# SLOTS (each slot carries exactly one query), cols = cache positions (Skv
+# allocation); blocks are chunk LENGTHS along those axes for the unrolled
+# (m, n) online-softmax path — counts are the ceil-div, capped by
+# ops.MAX_SLOT_CHUNKS/MAX_T_CHUNKS.  The heuristic keeps typical serving
+# shapes (pools <= 256 slots, caches <= 4096 positions) single-chunk; the
+# sweep may find streaming chunks profitable for long caches.  Like
+# chunk_attention this streams through XLA (no VMEM tile), so the sweep
+# budget is wide.
+register(KernelSpec(name="decode_attention", row_align=8, row_cap=256,
+                    col_align=128, col_cap=2048, full_col_threshold=4096,
+                    tune_row_cap=256, tune_col_cap=4096,
+                    sweep_budget_bytes=64 << 20))
 
 
 def bind(op: str, fn: Callable) -> None:

@@ -232,15 +232,28 @@ def init_attention(key, cfg: ModelConfig, dtype, tp: int = 1) -> dict:
     return p
 
 
+def _update_rows_at(buf, new, pos):
+    """Per-row cache write: ``buf[b, pos[b]:pos[b]+s] = new[b]`` for every
+    batch row (vmapped dynamic_update_slice -> one scatter)."""
+    def one(bb, nb, p):
+        starts = (p,) + (jnp.int32(0),) * (bb.ndim - 1)
+        return jax.lax.dynamic_update_slice(bb, nb.astype(bb.dtype), starts)
+
+    return jax.vmap(one)(buf, new, pos)
+
+
 def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
               tp: int = 1, causal: bool = True, cache: dict | None = None,
               cache_pos=None, xkv: jax.Array | None = None,
               use_rope: bool = True, window_override: int | str = "cfg",
-              ring_valid=None):
+              ring_valid=None, cache_positions=None):
     """GQA attention.  x: [B, S, d].  ``xkv`` switches to cross-attention
     (kv from encoder states, no rope/causal).  With ``cache`` (+``cache_pos``
-    traced scalar): write-then-attend over the cache.  Returns
-    (out, new_cache)."""
+    traced scalar): write-then-attend over the cache.  ``cache_positions``
+    ([B] traced int32, requires S == 1) switches to the ragged
+    continuous-batching decode path: each slot writes at its own position
+    and attends its own valid prefix through the ``decode_attention``
+    registry op.  Returns (out, new_cache)."""
     b, s, d = x.shape
     hd = cfg.resolved_head_dim()
     hq, grouped, _, head_to_kv = head_layout(cfg, tp)
@@ -261,6 +274,36 @@ def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
     if use_rope and xkv is None:
         q = layers.apply_rope(q, cos, sin)
         k = layers.apply_rope(k, cos, sin)
+
+    if cache_positions is not None:
+        # Ragged continuous-batching decode: one query per slot, per-slot
+        # write position and validity prefix.  Slot caches are full-length /
+        # position-addressed (no ring), so SWA is a mask, not addressing.
+        assert cache is not None and s == 1 and xkv is None
+        assert ring_valid is None, "ring caches are not slot-addressable"
+        if seq_par:
+            raise NotImplementedError(
+                "decode_seq_parallel does not compose with ragged decode")
+        from repro.kernels import ops as kernel_ops  # lazy: kernels optional
+
+        wpos = jnp.minimum(cache_positions.astype(jnp.int32),
+                           cache["k"].shape[1] - 1)
+        ck = _update_rows_at(cache["k"], k, wpos)
+        cv = _update_rows_at(cache["v"], v, wpos)
+        kk = hint(ck.transpose(0, 2, 1, 3), "dp", "tp", None, None)
+        vv = hint(cv.transpose(0, 2, 1, 3), "dp", "tp", None, None)
+        if grouped:
+            qg = hint(q[:, 0].reshape(b, hkv, hq // hkv, hd),
+                      "dp", "tp", None, None)
+        else:                                      # kv expanded per q-head
+            kk = kk[:, head_to_kv]
+            vv = vv[:, head_to_kv]
+            qg = hint(q[:, 0][:, :, None], "dp", "tp", None, None)
+        o = kernel_ops.decode_attention(
+            qg, kk, vv, wpos + 1, scale=hd ** -0.5, window=window,
+            policy=cfg.softmax_policy())
+        o = hint(o.reshape(b, 1, hq * hd), "dp", None, "tp")
+        return layers.dense(p["wo"], o), {"k": ck, "v": cv}
 
     new_cache = None
     kv_len = None
@@ -353,10 +396,12 @@ def init_mla(key, cfg: ModelConfig, dtype, tp: int = 1) -> dict:
 
 
 def mla_attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
-                  tp: int = 1, cache: dict | None = None, cache_pos=None):
+                  tp: int = 1, cache: dict | None = None, cache_pos=None,
+                  cache_positions=None):
     """MLA forward.  Cache stores only (c_latent, k_rope) — the compressed
     representation that is MLA's point; per-head K/V are re-expanded from the
-    latent on read."""
+    latent on read.  ``cache_positions`` ([B] traced, S == 1) is the ragged
+    continuous-batching decode path (per-slot write + length masking)."""
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.padded_heads(tp)
@@ -371,6 +416,29 @@ def mla_attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
                        eps=cfg.norm_eps)
     kr = layers.apply_rope(a[..., m.kv_lora_rank:][:, :, None, :],
                            cos, sin)[:, :, 0, :]   # [B, S, rd] head-shared
+
+    if cache_positions is not None:
+        assert cache is not None and s == 1
+        from repro.kernels import ops as kernel_ops  # lazy: kernels optional
+
+        wpos = jnp.minimum(cache_positions.astype(jnp.int32),
+                           cache["c"].shape[1] - 1)
+        cc = _update_rows_at(cache["c"], c, wpos)
+        ckr = _update_rows_at(cache["kr"], kr, wpos)
+        kv = layers.dense(p["wkv_b"], cc).reshape(b, cc.shape[1], h, nd + vd)
+        kf = jnp.concatenate(
+            [kv[..., :nd],
+             jnp.broadcast_to(ckr[:, :, None, :],
+                              (b, ckr.shape[1], h, rd))], -1)
+        qf = jnp.concatenate([qn, qr], -1)
+        qg = hint(qf[:, 0][:, :, None], "dp", "tp", None, None)
+        kk = hint(kf.transpose(0, 2, 1, 3), "dp", "tp", None, None)
+        vv = hint(kv[..., nd:].transpose(0, 2, 1, 3), "dp", "tp", None, None)
+        o = kernel_ops.decode_attention(
+            qg, kk, vv, wpos + 1, scale=(nd + rd) ** -0.5,
+            policy=cfg.softmax_policy())
+        o = hint(o.reshape(b, 1, h * vd), "dp", None, "tp")
+        return layers.dense(p["wo"], o), {"c": cc, "kr": ckr}
 
     new_cache = None
     kv_len = None

@@ -56,6 +56,23 @@ class Model:
         return engine.generate(params, prompt, cfg=self.cfg, steps=steps,
                                key=key, tp=self.tp, **kw)
 
+    # -- continuous batching -------------------------------------------------
+    def init_slot_pool(self, slots: int, max_len: int):
+        return kv_cache.init_slot_pool(self.cfg, slots, max_len, self.tp)
+
+    def decode_step_ragged(self, params, pool, tokens, active=None,
+                           moe_impl: str = "dispatch"):
+        return engine.decode_step_ragged(params, pool, tokens, cfg=self.cfg,
+                                         tp=self.tp, moe_impl=moe_impl,
+                                         active=active)
+
+    def serving_engine(self, params, **kw):
+        """A :class:`repro.serving.scheduler.ContinuousBatchingEngine`
+        bound to this model (slot pool + request scheduler)."""
+        from repro.serving.scheduler import ContinuousBatchingEngine
+
+        return ContinuousBatchingEngine(self, params, **kw)
+
 
 def build_model(arch: str, tp: int = 1, reduced: bool = False,
                 **overrides) -> Model:

@@ -68,8 +68,11 @@ def init_block(key, cfg: ModelConfig, tp: int = 1, cross: bool = False,
 
 def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
                 cache=None, cache_pos=None, enc=None, causal: bool = True,
-                moe_impl: str = "dispatch", ring_valid=None):
-    """One transformer block.  Returns (x, new_cache)."""
+                moe_impl: str = "dispatch", ring_valid=None,
+                cache_positions=None):
+    """One transformer block.  Returns (x, new_cache).  ``cache_positions``
+    ([B] traced) selects the ragged continuous-batching decode path in the
+    attention mixers (per-slot write position + length masking)."""
     if cfg.family == "ssm":
         if cache is None:
             return rwkv_mod.rwkv_block(p, x, cfg=cfg), None
@@ -80,7 +83,8 @@ def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
     if cfg.family == "hybrid":
         return hybrid_mod.hybrid_block(p, x, cos, sin, cfg=cfg, tp=tp,
                                        cache=cache, cache_pos=cache_pos,
-                                       ring_valid=ring_valid)
+                                       ring_valid=ring_valid,
+                                       cache_positions=cache_positions)
 
     single = x.ndim == 2
     xin = x[:, None] if single else x
@@ -92,13 +96,15 @@ def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
     if cfg.mla is not None:
         a, new_self = attn_mod.mla_attention(p["attn"], h, cos, sin, cfg=cfg,
                                              tp=tp, cache=self_cache,
-                                             cache_pos=cache_pos)
+                                             cache_pos=cache_pos,
+                                             cache_positions=cache_positions)
     else:
         a, new_self = attn_mod.attention(p["attn"], h, cos, sin, cfg=cfg,
                                          tp=tp, causal=causal,
                                          cache=self_cache,
                                          cache_pos=cache_pos,
-                                         ring_valid=ring_valid)
+                                         ring_valid=ring_valid,
+                                         cache_positions=cache_positions)
     x1 = xin + a
     new_cache: Any = new_self
     if "xattn" in p:

@@ -1,1 +1,3 @@
-"""Serving: KV caches, prefill/decode steps, sampling, generation loop."""
+"""Serving: KV caches + slot pools, prefill/decode steps (lockstep and
+ragged continuous-batching), sampling, generation loop, and the slot-based
+request scheduler (``repro.serving.scheduler``)."""

@@ -1,9 +1,13 @@
 """Serving: prefill + single-token decode steps for every family.
 
 ``decode_step`` is the function the decode_* dry-run cells lower: one new
-token against a KV cache of ``seq_len``.  The layer loop is a ``lax.scan``
-over (stacked params, stacked cache).  Sampling is a softmax site: it
-resolves through the config's SoftmaxPolicy (algorithm + kernel switch).
+token against a KV cache of ``seq_len``.  ``decode_step_ragged`` is its
+continuous-batching generalization: one jitted step over a fixed slot pool
+whose slots sit at different positions (per-slot lengths, active-slot
+masking) — the step the request scheduler (serving/scheduler.py) drives.
+The layer loop is a ``lax.scan`` over (stacked params, stacked cache).
+Sampling is a softmax site: it resolves through the config's SoftmaxPolicy
+(algorithm + kernel switch).
 """
 
 from __future__ import annotations
@@ -37,16 +41,20 @@ def _layer_loop(cfg: ModelConfig, body, x, xs):
 
 
 def _cos_sin_at(cfg: ModelConfig, pos, batch: int):
-    """RoPE tables for a single (traced) position -> [B, 1, hd/2]."""
+    """RoPE tables for a traced position -> [B, 1, hd/2].  ``pos`` is a
+    scalar (lockstep decode) or a [B] vector (ragged per-slot decode)."""
     hd = cfg.resolved_head_dim()
     if cfg.mla is not None:
         hd = cfg.mla.qk_rope_head_dim
+    pos = jnp.asarray(pos)
+    base = (jnp.full((batch, 1), pos) if pos.ndim == 0
+            else pos.reshape(batch, 1))
     if cfg.mrope_sections is None:
-        positions = jnp.full((batch, 1), pos)
+        positions = base
     else:
         # Text positions in M-RoPE: all three streams equal (past the stub
         # vision prefix all ids advance together).
-        positions = jnp.full((3, batch, 1), pos)
+        positions = jnp.broadcast_to(base[None], (3, batch, 1))
     return layers.rope_cos_sin(positions, hd, cfg.rope_theta,
                                sections=cfg.mrope_sections)
 
@@ -84,6 +92,58 @@ def decode_step(params: Params, cache, tokens, pos, *, cfg: ModelConfig,
     h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
     logits = transformer.lm_logits(params, h, cfg=cfg)
     return logits, new_cache
+
+
+def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
+                       tp: int = 1, moe_impl: str = "dispatch",
+                       active=None):
+    """One continuous-batching decode step over a slot pool.
+
+    ``pool`` is ``kv_cache.init_slot_pool`` state: ``{"kv": stacked-layer
+    cache [L, S, ...], "lengths": int32[S]}``.  ``tokens``: [S] int32 (free
+    slots may carry any value).  ``active``: [S] bool (default ``lengths >
+    0``) — inactive slots still flow through the compute (their writes land
+    in dead cache rows and their logits are garbage) but their lengths do
+    not advance, so one jitted step serves any mix of sequence ages without
+    recompilation.
+
+    Returns (logits [S, V_padded], new_pool).  Per-slot positions are the
+    current ``lengths`` (write-then-attend); attention masking runs through
+    the ``decode_attention`` registry op.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "continuous batching does not cover the fixed-dec_len "
+            "encoder-decoder path")
+    kv, lengths = pool["kv"], pool["lengths"]
+    s = tokens.shape[0]
+    if active is None:
+        active = lengths > 0
+    x = layers.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))  # [S, d]
+
+    if cfg.family == "ssm":
+        # Recurrent state has no position axis: the lockstep body is already
+        # ragged-safe (free slots update dead state, replaced on adopt).
+        def body(h, xs):
+            pl, cl = xs
+            h2, st = transformer.block_apply(pl, h, None, None, cfg=cfg,
+                                             tp=tp, cache=cl)
+            return h2, st
+    else:
+        cos, sin = _cos_sin_at(cfg, lengths, s)
+
+        def body(h, xs):
+            pl, cl = xs
+            h2, new_c = transformer.block_apply(
+                pl, h, cos, sin, cfg=cfg, tp=tp, cache=cl,
+                cache_positions=lengths, moe_impl=moe_impl)
+            return h2, new_c
+
+    h, new_kv = _layer_loop(cfg, body, x, (params["blocks"], kv))
+    h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
+    logits = transformer.lm_logits(params, h, cfg=cfg)
+    new_lengths = jnp.where(active, lengths + 1, lengths)
+    return logits, {"kv": new_kv, "lengths": new_lengths}
 
 
 def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
@@ -170,6 +230,51 @@ def sample_token(logits, key, temperature: float = 1.0, *,
         return jnp.argmax(logits, axis=-1)
     probs = policy.softmax(logits / temperature, axis=-1)
     return jax.random.categorical(key, jnp.log(probs + 1e-30), axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def _lockstep_fns(cfg: ModelConfig, tp: int, max_len: int):
+    """Jitted (prefill, decode_step) pair, cached per (cfg, tp, max_len) so
+    repeated lockstep runs (serve fallback, benchmark baselines) don't
+    recompile per call the way a fresh ``jax.jit(partial(...))`` would."""
+    pre = jax.jit(functools.partial(prefill, cfg=cfg, tp=tp,
+                                    max_len=max_len))
+    step = jax.jit(functools.partial(decode_step, cfg=cfg, tp=tp))
+    return pre, step
+
+
+def generate_timed(params, prompt, *, cfg: ModelConfig, steps: int, key,
+                   tp: int = 1, max_len: int | None = None,
+                   temperature: float = 1.0, **prefill_kw):
+    """Lockstep generation with per-phase timing: :func:`generate` semantics
+    (steps+1 tokens: one sampled from prefill logits, ``steps`` decoded),
+    returning ``(tokens, stats)`` where stats carries prefill/decode wall
+    seconds and token counts separately.  This is the single source of truth
+    for the phase-timed static-batching loop (launch.serve fallback and the
+    serving-throughput baseline both drive it)."""
+    import time
+
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    pre, step_fn = _lockstep_fns(cfg, tp, max_len)
+    t0 = time.perf_counter()
+    logits, cache = pre(params, prompt, **prefill_kw)
+    tok = sample_token(logits, key, temperature, cfg=cfg, vocab=cfg.vocab)
+    jax.block_until_ready(tok)
+    t1 = time.perf_counter()
+    toks = []
+    for i in range(steps):
+        toks.append(tok)
+        key, sub = jax.random.split(key)
+        logits, cache = step_fn(params, cache, tok, jnp.int32(s + i))
+        tok = sample_token(logits, sub, temperature, cfg=cfg,
+                           vocab=cfg.vocab)
+    toks.append(tok)
+    out = jnp.stack(toks, axis=1)
+    jax.block_until_ready(out)
+    t2 = time.perf_counter()
+    return out, dict(prefill_tokens=b * s, prefill_s=t1 - t0,
+                     decode_tokens=b * steps, decode_s=t2 - t1)
 
 
 def generate(params, prompt, *, cfg: ModelConfig, steps: int, key,

@@ -1,13 +1,30 @@
 """Per-family KV/state cache construction and shape logic.
 
 Cache pytrees are stacked on a leading layer axis so the decode layer loop is
-one ``lax.scan`` (cache consumed as xs, new cache emitted as ys).  SWA archs
-allocate only ``window`` positions (ring addressing is a documented follow-up;
-here we allocate min(window_pad, max_len) and slide by recompute).
+one ``lax.scan`` (cache consumed as xs, new cache emitted as ys).
+
+Two addressing schemes coexist:
+
+  * **ring** (``ring=True``, single-sequence decode of SWA archs): the cache
+    allocates only ``window`` positions and slots are addressed ``pos %
+    window``.  Every written slot holds an in-window position (RoPE baked at
+    write time), so reads need only a validity bound, not masks.
+  * **full** (``ring=False``): position-addressed, ``max_len`` allocation.
+    Prefill paths and the continuous-batching slot pools use this — a slot
+    pool must admit sequences at arbitrary positions, so SWA becomes a mask
+    over the full-length cache rather than addressing.
+
+The slot pool (:func:`init_slot_pool`) is the continuous-batching extension:
+the batch axis becomes a fixed pool of request slots, plus a per-slot
+``lengths`` array — the number of valid cache positions (0 marks a free
+slot; it is also the next write position, and the length-mask makes stale
+entries from an evicted request invisible to the next occupant until they
+are overwritten).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -77,8 +94,67 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int = 1,
     }
 
 
-def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
-    import jax
+# ---------------------------------------------------------------------------
+# Continuous-batching slot pool.
+# ---------------------------------------------------------------------------
+def init_slot_pool(cfg: ModelConfig, slots: int, max_len: int,
+                   tp: int = 1) -> dict:
+    """A fixed pool of ``slots`` cache slots for continuous batching.
 
-    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    Returns ``{"kv": <stacked-layer cache, batch axis = slots, full-length
+    position addressing>, "lengths": int32[slots]}``.  ``lengths[s]`` is the
+    valid cache prefix of slot ``s`` (0 = free) and doubles as its next
+    write position; ``engine.decode_step_ragged`` consumes/advances it.
+    """
+    return {"kv": init_cache(cfg, slots, max_len, tp, ring=False),
+            "lengths": jnp.zeros((slots,), jnp.int32)}
+
+
+def adopt_slot(pool: dict, cache, slot, length) -> dict:
+    """Admit a freshly prefilled batch=1 cache into ``slot``.
+
+    ``cache`` must come from ``engine.prefill(..., max_len=<pool max_len>)``
+    so the position axis matches the pool.  jit-safe: ``slot``/``length``
+    may be traced.
+    """
+    kv = jax.tree.map(
+        lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=1), pool["kv"], cache)
+    return {"kv": kv,
+            "lengths": pool["lengths"].at[slot].set(
+                jnp.asarray(length, jnp.int32))}
+
+
+def free_slot(pool: dict, slot) -> dict:
+    """Mark ``slot`` free (length 0).  Its cache contents become dead: the
+    length mask hides them and the next :func:`adopt_slot` overwrites them."""
+    return {"kv": pool["kv"], "lengths": pool["lengths"].at[slot].set(0)}
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (scheduler slot budgeting).
+# ---------------------------------------------------------------------------
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
+                tp: int = 1) -> int:
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len, tp))
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def slot_pool_bytes(cfg: ModelConfig, slots: int, max_len: int,
+                    tp: int = 1) -> int:
+    """Total bytes of a ``slots``-wide pool (cache + lengths array)."""
+    pool = jax.eval_shape(lambda: init_slot_pool(cfg, slots, max_len, tp))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(pool))
+
+
+def max_slots_in_budget(cfg: ModelConfig, max_len: int, budget_bytes: int,
+                        tp: int = 1) -> int:
+    """Largest slot count whose pool fits ``budget_bytes`` (0 if even one
+    slot does not fit).  Pool bytes are affine in the slot count, so two
+    shape evaluations determine the answer."""
+    one = slot_pool_bytes(cfg, 1, max_len, tp)
+    two = slot_pool_bytes(cfg, 2, max_len, tp)
+    per_slot = max(1, two - one)
+    fixed = one - per_slot
+    n = (budget_bytes - fixed) // per_slot
+    return max(0, int(n))

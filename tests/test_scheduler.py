@@ -1,0 +1,294 @@
+"""Continuous-batching tests: the decode_attention registry op, ragged
+slot-pool decode vs per-sequence sequential decode (including mid-run
+eviction + refill), the request scheduler, and slot memory budgeting."""
+
+import functools
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, registry
+from repro.models import build_model
+from repro.serving import engine, kv_cache
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention op.
+# ---------------------------------------------------------------------------
+def _ref_decode(q, k, v, lengths, scale, window=None):
+    """Naive per-slot masked softmax attention (numpy)."""
+    s, h, g, d = q.shape
+    out = np.zeros((s, h, g, v.shape[-1]), np.float32)
+    for i in range(s):
+        ln = int(lengths[i])
+        if ln == 0:
+            continue
+        lo = 0 if window is None else max(0, ln - window)
+        sc = np.einsum("hgd,htd->hgt", np.asarray(q[i], np.float32),
+                       np.asarray(k[i, :, lo:ln], np.float32)) * scale
+        p = np.exp(sc - sc.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        out[i] = np.einsum("hgt,htd->hgd", p,
+                           np.asarray(v[i, :, lo:ln], np.float32))
+    return out
+
+
+class TestDecodeAttentionOp:
+    def setup_method(self, _):
+        ks = jax.random.split(KEY, 3)
+        self.shape = (5, 2, 3, 16, 40)           # S, Hkv, G, D, T
+        s, h, g, d, t = self.shape
+        self.q = jax.random.normal(ks[0], (s, h, g, d))
+        self.k = jax.random.normal(ks[1], (s, h, t, d))
+        self.v = jax.random.normal(ks[2], (s, h, t, d))
+        self.lengths = jnp.array([1, 7, 40, 0, 23], jnp.int32)
+
+    def test_matches_reference(self):
+        o = ops.decode_attention(self.q, self.k, self.v, self.lengths)
+        np.testing.assert_allclose(
+            np.asarray(o),
+            _ref_decode(self.q, self.k, self.v, self.lengths, 16 ** -0.5),
+            atol=1e-5)
+        assert not np.isnan(np.asarray(o)).any()   # incl. the length-0 slot
+
+    def test_window_masking(self):
+        o = ops.decode_attention(self.q, self.k, self.v, self.lengths,
+                                 window=6)
+        np.testing.assert_allclose(
+            np.asarray(o),
+            _ref_decode(self.q, self.k, self.v, self.lengths, 16 ** -0.5,
+                        window=6), atol=1e-5)
+
+    def test_chunked_matches_single_block(self):
+        base = ops.decode_attention(self.q, self.k, self.v, self.lengths)
+        for bs, bt in ((8, 8), (16, 128), (8, 16)):
+            o = ops.decode_attention(self.q, self.k, self.v, self.lengths,
+                                     block_s=bs, block_t=bt)
+            np.testing.assert_allclose(np.asarray(o), np.asarray(base),
+                                       atol=1e-5)
+
+    def test_registry_resolution_chain(self):
+        spec = registry.get_spec("decode_attention")
+        assert "decode_attention" in registry.registered_ops()
+        # heuristic: typical serving shapes stay single-chunk
+        assert spec.heuristic_blocks(8, 1024) == (8, 1024)
+        with tempfile.TemporaryDirectory() as td:
+            cf = td + "/cache.json"
+            registry.record_tuned("decode_attention", 8, 1024, jnp.float32,
+                                  (8, 256), path=cf)
+            hit = registry.block_shapes("decode_attention", 8, 1024,
+                                        use_cache=True, cache_file=cf)
+            assert hit == (8, 256)
+            # explicit override still wins over the cache
+            ov = registry.block_shapes("decode_attention", 8, 1024,
+                                       block_cols=512, use_cache=True,
+                                       cache_file=cf)
+            assert ov[1] == 512
+
+    def test_autotune_sweep_roundtrip(self):
+        with tempfile.TemporaryDirectory() as td:
+            cf = td + "/cache.json"
+            res = autotune.autotune_op("decode_attention", 8, 256, reps=1,
+                                       min_time_s=0.005, cache_file=cf)
+            registry.load_cache(cf, force=True)
+            hit = registry.block_shapes("decode_attention", 8, 256,
+                                        use_cache=True, cache_file=cf)
+            assert hit == res.best
+
+
+# ---------------------------------------------------------------------------
+# Ragged slot-pool decode == per-sequence sequential decode.
+# ---------------------------------------------------------------------------
+def _sequential_logits(m, params, toks, plens, n_steps):
+    """Per-sequence scalar decode (the lockstep path), full-length caches."""
+    cfg = m.cfg
+    out = {}
+    caches = []
+    for i in range(len(plens)):
+        _, c = engine.prefill(params, toks[i:i + 1, :plens[i]], cfg=cfg,
+                              max_len=32)
+        caches.append(c)
+    step = jax.jit(functools.partial(engine.decode_step, cfg=cfg))
+    for t in range(n_steps):
+        for i in range(len(plens)):
+            lg, caches[i] = step(params, caches[i],
+                                 toks[i:i + 1, plens[i] + t],
+                                 jnp.int32(plens[i] + t))
+            out[(i, t)] = np.asarray(lg[0, :cfg.vocab])
+    return out
+
+
+def _ragged_pool(m, params, toks, plens):
+    cfg = m.cfg
+    pool = kv_cache.init_slot_pool(cfg, len(plens), 32)
+    for i in range(len(plens)):
+        _, c = engine.prefill(params, toks[i:i + 1, :plens[i]], cfg=cfg,
+                              max_len=32)
+        pool = kv_cache.adopt_slot(pool, c, i, plens[i])
+    return pool
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen2.5-14b",                               # dense GQA, grouped
+    "rwkv6-1.6b",                                # recurrent state (no pos)
+    pytest.param("h2o-danube-3-4b", marks=pytest.mark.slow),   # SWA mask
+    pytest.param("deepseek-v2-lite-16b",
+                 marks=pytest.mark.slow),        # MLA latent cache
+    pytest.param("hymba-1.5b", marks=pytest.mark.slow),        # hybrid
+])
+def test_ragged_decode_matches_sequential(arch):
+    """Batched decode with per-slot lengths must match per-sequence
+    sequential decode (atol like test_ring_decode_matches_full_window)."""
+    m = build_model(arch, reduced=True)
+    cfg = m.cfg
+    params = m.init(KEY)
+    plens = [3, 5, 7]
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0, cfg.vocab)
+    n_steps = 5
+    want = _sequential_logits(m, params, toks, plens, n_steps)
+
+    pool = _ragged_pool(m, params, toks, plens)
+    rstep = jax.jit(functools.partial(engine.decode_step_ragged, cfg=cfg))
+    for t in range(n_steps):
+        tok = jnp.array([toks[i, plens[i] + t] for i in range(3)], jnp.int32)
+        lg, pool = rstep(params, pool, tok)
+        for i in range(3):
+            np.testing.assert_allclose(
+                np.asarray(lg[i, :cfg.vocab]), want[(i, t)], atol=2e-3,
+                err_msg=f"{arch}: slot {i} step {t}")
+
+
+def test_ragged_evict_refill_mid_run():
+    """A slot evicted and refilled mid-run: the refilled occupant's logits
+    must match a fresh sequential decode (stale cache entries above the new
+    length must be invisible)."""
+    m = build_model("qwen2.5-14b", reduced=True)
+    cfg = m.cfg
+    params = m.init(KEY)
+    plens = [6, 4, 9]
+    toks = jax.random.randint(jax.random.PRNGKey(2), (4, 20), 0, cfg.vocab)
+    pool = _ragged_pool(m, params, toks, plens)
+    rstep = jax.jit(functools.partial(engine.decode_step_ragged, cfg=cfg))
+
+    # age the pool: 4 steps, slot 1 included (its entries become stale junk)
+    for t in range(4):
+        tok = jnp.array([toks[i, plens[i] + t] for i in range(3)], jnp.int32)
+        _, pool = rstep(params, pool, tok)
+
+    # evict slot 1, refill with a NEW shorter request (row 3 of toks)
+    pool = kv_cache.free_slot(pool, 1)
+    new_plen = 3
+    _, c = engine.prefill(params, toks[3:4, :new_plen], cfg=cfg, max_len=32)
+    pool = kv_cache.adopt_slot(pool, c, 1, new_plen)
+
+    # fresh sequential reference for the new occupant
+    _, ref_cache = engine.prefill(params, toks[3:4, :new_plen], cfg=cfg,
+                                  max_len=32)
+    step = jax.jit(functools.partial(engine.decode_step, cfg=cfg))
+    for t in range(4):
+        feed = [toks[0, plens[0] + 4 + t], toks[3, new_plen + t],
+                toks[2, plens[2] + 4 + t]]
+        lg, pool = rstep(params, pool, jnp.array(feed, jnp.int32))
+        ref_lg, ref_cache = step(params, ref_cache, toks[3:4, new_plen + t],
+                                 jnp.int32(new_plen + t))
+        np.testing.assert_allclose(np.asarray(lg[1, :cfg.vocab]),
+                                   np.asarray(ref_lg[0, :cfg.vocab]),
+                                   atol=2e-3, err_msg=f"refill step {t}")
+
+
+def test_inactive_slots_do_not_advance():
+    m = build_model("qwen2.5-14b", reduced=True)
+    params = m.init(KEY)
+    pool = kv_cache.init_slot_pool(m.cfg, 3, 32)
+    _, c = engine.prefill(params, jnp.zeros((1, 4), jnp.int32), cfg=m.cfg,
+                          max_len=32)
+    pool = kv_cache.adopt_slot(pool, c, 1, 4)
+    _, pool = engine.decode_step_ragged(params, pool,
+                                        jnp.zeros((3,), jnp.int32),
+                                        cfg=m.cfg)
+    assert pool["lengths"].tolist() == [0, 5, 0]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler.
+# ---------------------------------------------------------------------------
+class TestScheduler:
+    def test_completes_all_with_slot_reuse(self):
+        m = build_model("qwen2.5-14b", reduced=True)
+        params = m.init(KEY)
+        eng = ContinuousBatchingEngine(m, params, slots=3, max_len=48,
+                                       seed=1)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=tuple(rng.integers(0, m.cfg.vocab, 6)),
+                        max_new_tokens=int(rng.integers(2, 9)))
+                for i in range(7)]
+        comps = eng.run(reqs)
+        assert [c.rid for c in comps] == list(range(7))
+        for c in comps:
+            assert len(c.tokens) == c.max_new_tokens
+            assert c.reason == "max_tokens"
+        # 7 requests over 3 slots: at least one slot served >= 2 requests
+        assert eng.stats["admitted"] == 7
+        slots = [c.slot for c in comps]
+        assert max(slots.count(s) for s in set(slots)) >= 2
+        assert eng.free_slots() == [0, 1, 2]
+        th = eng.throughput()
+        assert th["decode_tok_s"] > 0 and th["prefill_tok_s"] > 0
+
+    def test_wall_clock_opt_out_collapses_arrivals(self):
+        """use_wall_clock=False with future arrival times must still
+        terminate (arrivals collapse to t=0 instead of never arriving)."""
+        m = build_model("qwen2.5-14b", reduced=True)
+        params = m.init(KEY)
+        eng = ContinuousBatchingEngine(m, params, slots=2, max_len=32,
+                                       seed=3)
+        reqs = [Request(rid=i, prompt=(1, 2, 3), max_new_tokens=2,
+                        arrival_s=10.0 + i) for i in range(3)]
+        comps = eng.run(reqs, use_wall_clock=False)
+        assert len(comps) == 3
+
+    def test_rejects_oversized_request(self):
+        m = build_model("qwen2.5-14b", reduced=True)
+        params = m.init(KEY)
+        eng = ContinuousBatchingEngine(m, params, slots=1, max_len=8)
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            eng.run([Request(rid=0, prompt=(1, 2, 3, 4), max_new_tokens=8)])
+
+    def test_encdec_unsupported(self):
+        m = build_model("whisper-base", reduced=True)
+        with pytest.raises(NotImplementedError):
+            ContinuousBatchingEngine(m, {}, slots=1, max_len=8)
+
+
+# ---------------------------------------------------------------------------
+# Slot memory budgeting.
+# ---------------------------------------------------------------------------
+class TestSlotBudget:
+    def test_pool_bytes_affine_and_budget_consistent(self):
+        cfg = build_model("qwen2.5-14b", reduced=True).cfg
+        b1 = kv_cache.slot_pool_bytes(cfg, 1, 64)
+        b4 = kv_cache.slot_pool_bytes(cfg, 4, 64)
+        assert b4 > b1
+        n = 5
+        budget = kv_cache.slot_pool_bytes(cfg, n, 64)
+        assert kv_cache.max_slots_in_budget(cfg, 64, budget) == n
+        assert kv_cache.max_slots_in_budget(cfg, 64, budget - 1) == n - 1
+        assert kv_cache.max_slots_in_budget(cfg, 64, 0) == 0
+
+    def test_engine_from_memory_budget(self):
+        m = build_model("qwen2.5-14b", reduced=True)
+        params = m.init(KEY)
+        budget = kv_cache.slot_pool_bytes(m.cfg, 3, 32)
+        eng = ContinuousBatchingEngine(m, params, max_len=32,
+                                       memory_budget_bytes=budget)
+        assert eng.n_slots == 3
+        with pytest.raises(ValueError, match="fits 0 slots"):
+            ContinuousBatchingEngine(m, params, max_len=32,
+                                     memory_budget_bytes=16)
