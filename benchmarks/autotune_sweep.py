@@ -29,6 +29,7 @@ SHAPES = (
     ("flash_attention", 128, 256),
     ("chunk_attention", 2048, 2048),
     ("decode_attention", 8, 4096),     # rows/cols = slots / cache positions
+    ("decode_attention_paged", 8, 4096),
 )
 
 FAST_SHAPES = (
@@ -37,6 +38,7 @@ FAST_SHAPES = (
     ("flash_attention", 128, 128),
     ("chunk_attention", 256, 512),
     ("decode_attention", 8, 512),
+    ("decode_attention_paged", 8, 512),
 )
 
 # CI smoke: one candidate apiece — proves sweep/persist/hit without timing
@@ -45,6 +47,7 @@ SMOKE_SHAPES = (
     ("flash_attention", 128, 128),
     ("chunk_attention", 256, 256),
     ("decode_attention", 8, 256),
+    ("decode_attention_paged", 8, 256),
 )
 
 

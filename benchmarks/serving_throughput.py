@@ -5,18 +5,26 @@ Decode-time attention is the repo's most bandwidth-bound softmax consumer
 (arXiv:1904.12380) shows these passes stay memory-bound at serving batch
 sizes, so requests/s comes from keeping the batch axis full.  This benchmark
 drives the slot-based scheduler (``repro.serving.scheduler``) over a Poisson
-request stream at several pool sizes and reports:
+request stream at several byte budgets and reports:
 
-  * prefill tok/s and decode tok/s separately (the phases have different
-    arithmetic intensity — a single aggregate hides the bound one),
-  * requests/s end to end,
+  * the PAGED pool (the default serving path: page arena + per-slot page
+    tables + bucketed prefill): prefill tok/s and decode tok/s separately
+    (the phases have different arithmetic intensity — a single aggregate
+    hides the bound one) and requests/s end to end,
+  * the strip pool (slot-major ``max_len`` strips) at the SAME byte
+    budget: its decode tok/s, plus ``paged_vs_strip_concurrency`` — how
+    many concurrent requests each pool design admits for that budget (the
+    tentpole memory claim: paged capacity is bounded by tokens in flight,
+    strips reserve ``max_len`` per request whatever the workload uses),
   * a static-batching baseline: the PR-2 ``engine.generate`` lockstep loop
-    serving the same workload in fixed batches of ``slots`` — every batch
-    decodes until its slowest member finishes, which is exactly the waste
-    continuous batching removes.
+    serving the same workload in fixed batches — every batch decodes until
+    its slowest member finishes, which is exactly the waste continuous
+    batching removes.
 
 CSV rows via benchmarks.common.emit.  ``--smoke`` is the CI serving gate:
-tiny model, 4 slots, 8 decode steps — scheduler regressions fail on PR.
+tiny model, paged pool end-to-end (admission through the page allocator,
+page-table decode, bucketed prefill, eviction) — scheduler regressions
+fail on PR.
 """
 
 from __future__ import annotations
@@ -79,38 +87,89 @@ def _baseline_generate(model, params, requests, batch, max_len):
                 wall_s=pre_s + dec_s)
 
 
+def _measure(eng, reqs, warm_prompt_len):
+    """Warm the jitted prefill buckets + ragged step + adopt/free outside
+    the measurement, then serve ``reqs`` and return throughput()."""
+    from repro.serving.scheduler import Request
+
+    eng.run([Request(rid=-1, prompt=tuple(range(warm_prompt_len)),
+                     max_new_tokens=3)])
+    eng.reset_stats()
+    eng.run(reqs)
+    return eng.throughput()
+
+
 def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
         slots_list=(1, 4, 8), prompt_len: int = 16, max_new: int = 24,
         max_len: int = 64, arrival_rate: float | None = None, seed: int = 0):
     import jax
 
     from repro.models import build_model
-    from repro.serving.scheduler import Request
+    from repro.serving import kv_cache
 
     model = build_model(arch, reduced=True)
+    cfg = model.cfg
     params = model.init(jax.random.PRNGKey(0))
-    vocab = model.cfg.vocab
+    vocab = cfg.vocab
+    paged_ok = kv_cache.supports_paging(cfg)
+    workload = prompt_len + max_new                   # tokens one request uses
+    # page size sized so a request spans a few pages (the granularity the
+    # memory claim depends on); the registry default (128) would be a
+    # single page at benchmark scale.
+    page_size = max(8, min(128, workload // 2 // 8 * 8))
     rows = []
     for slots in slots_list:
-        eng = model.serving_engine(params, slots=slots, max_len=max_len,
-                                   seed=seed)
-        # warm the jitted prefill + ragged decode step + adopt/free outside
-        # the measurement (max_new >= 2 so at least one decode step runs)
-        eng.run([Request(rid=-1, prompt=tuple(range(prompt_len)),
-                         max_new_tokens=3)])
-        eng.reset_stats()
+        # the byte budget everything below shares: ``slots`` max_len strips
+        budget = kv_cache.slot_pool_bytes(cfg, slots, max_len, model.tp)
+        base = f"serving/{arch}/slots={slots}/n={n_requests}"
+
+        if paged_ok:
+            pslots, pages = kv_cache.paged_dims_in_budget(
+                cfg, max_len, budget, model.tp, page_size=page_size,
+                avg_tokens=workload)
+            # concurrency the page arena actually backs for this workload:
+            # the CAPACITY is what the memory-ratio row reports; the
+            # engine itself is sized to the offered load — slots the
+            # request stream can never occupy would bill dead per-step
+            # compute to the paged decode metric
+            per_req = -(-workload // page_size)
+            capacity = max(1, min(pslots, (pages - 1) // per_req))
+            eff = min(capacity, n_requests)
+            eng = model.serving_engine(
+                params, slots=eff, max_len=max_len, seed=seed, paged=True,
+                page_size=page_size, pages=pages)
+        else:
+            eff = slots
+            eng = model.serving_engine(params, slots=slots, max_len=max_len,
+                                       seed=seed, paged=False)
         reqs = _requests(n_requests, prompt_len, max_new, arrival_rate,
                          vocab, seed=seed)
-        eng.run(reqs)
-        th = eng.throughput()
-        base = f"serving/{arch}/slots={slots}/n={n_requests}"
+        th = _measure(eng, reqs, prompt_len)
         rows.append((f"{base}/prefill", round(1e6 / max(
             th["prefill_tok_s"], 1e-9), 2), f"{th['prefill_tok_s']:.1f}tok/s"))
         rows.append((f"{base}/decode", round(1e6 / max(
             th["decode_tok_s"], 1e-9), 2), f"{th['decode_tok_s']:.1f}tok/s"))
         rows.append((f"{base}/requests", round(th["wall_s"] * 1e6, 2),
                      f"{th['requests_s']:.2f}req/s"))
-        # static-batching baseline at the same concurrency
+
+        if paged_ok:
+            # strip pool at the SAME byte budget: decode tok/s + how many
+            # concurrent requests each design admits for those bytes
+            seng = model.serving_engine(params, slots=slots, max_len=max_len,
+                                        seed=seed, paged=False)
+            sreqs = _requests(n_requests, prompt_len, max_new, arrival_rate,
+                              vocab, seed=seed)
+            sth = _measure(seng, sreqs, prompt_len)
+            rows.append((f"{base}/strip_decode", round(1e6 / max(
+                sth["decode_tok_s"], 1e-9), 2),
+                f"{sth['decode_tok_s']:.1f}tok/s"))
+            ratio = capacity / slots
+            rows.append((f"{base}/paged_vs_strip_concurrency",
+                         round(ratio, 3),
+                         f"{ratio:.2f}x ({capacity} vs {slots} reqs @ "
+                         f"{budget}B, page={page_size})"))
+
+        # static-batching baseline at the strip concurrency
         reqs = _requests(n_requests, prompt_len, max_new, None, vocab,
                          seed=seed)
         bl = _baseline_generate(model, params, reqs, slots, max_len)
@@ -126,9 +185,11 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="qwen2.5-14b")
     p.add_argument("--smoke", action="store_true",
-                   help="CI serving gate: tiny model, 4 slots, 8 steps")
+                   help="CI serving gate: tiny model, paged pool "
+                        "end-to-end")
     p.add_argument("--slots", default=None,
-                   help="comma list of slot counts (default 1,4,8)")
+                   help="comma list of strip-equivalent byte budgets "
+                        "(default 1,4,8)")
     p.add_argument("--requests", type=int, default=16)
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--max-new", type=int, default=24)
@@ -137,13 +198,13 @@ def main(argv=None) -> None:
     args = p.parse_args(argv)
     if args.smoke:
         run(arch=args.arch, n_requests=6, slots_list=(4,), prompt_len=8,
-            max_new=8, max_len=24)
+            max_new=8, max_len=64)
         return
     slots = (tuple(int(s) for s in args.slots.split(","))
              if args.slots else (1, 4, 8))
     run(arch=args.arch, n_requests=args.requests, slots_list=slots,
         prompt_len=args.prompt_len, max_new=args.max_new,
-        max_len=args.prompt_len + args.max_new + 8,
+        max_len=2 * (args.prompt_len + args.max_new),
         arrival_rate=args.arrival_rate)
 
 

@@ -1,0 +1,286 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: compare ``benchmarks.run --json`` dumps
+against the committed baseline and fail on >30% regressions.
+
+Usage::
+
+    python scripts/check_bench.py BENCH_baseline.json current.json \
+        [more_current.json ...] [--threshold 0.30] [--min-us 100]
+
+Robustness against noisy runners (the reason this is not a naive
+per-metric absolute comparison):
+
+  * **best-of-N**: several current files may be passed (CI runs the smoke
+    twice); each metric takes its fastest observation — timing noise is
+    one-sided (spikes are always slow),
+  * **self-calibration**: the median ``current / baseline`` ratio over
+    all time metrics estimates the machine-speed shift vs the baseline
+    run; every time metric is normalized by it (clamped to >= 1, so a
+    faster machine is never used to manufacture regressions).  A uniform
+    slowdown — a slower runner — shifts the median and cancels out; a
+    single subsystem regressing stands out against it.  The trade-off: a
+    change that slows EVERYTHING proportionally is invisible, so the
+    calibration factor is printed and warns above 1.5x,
+  * metric-name canonicalization: a trailing parenthesized annotation is
+    dropped — autotune rows embed the winning block in the name
+    (``.../tuned(8, 128)``) and the winner may legitimately move,
+  * ``--min-us``: time metrics under the floor are sub-noise at smoke
+    scale and only warn,
+  * **per-metric adaptive tolerance**: the baseline records every
+    metric's cross-run spread from its refresh runs (``"spreads"``); the
+    gate widens that metric's threshold by the spread (capped at +100%),
+    so a bimodal microbench's own observed noise cannot fail CI while a
+    regression larger than noise + threshold still does — and even the
+    noisiest metric keeps catching order-of-magnitude regressions,
+  * metrics whose name contains ``_vs_`` (or ends ``/ratio``) are
+    dimensionless speedup/memory RATIOS where HIGHER is better (e.g.
+    ``continuous_vs_static``, ``paged_vs_strip_concurrency``); they are
+    compared directly (no calibration) with the same spread-widened
+    tolerance — a timing-derived ratio is as bimodal as its timings,
+    a deterministic one (pure byte accounting) stays tight,
+  * a metric present in the baseline but MISSING from the current run
+    fails — a benchmark silently disappearing is exactly the rot the
+    smoke job exists to catch.  Intentional renames/removals refresh the
+    baseline (docs/serving.md "Refreshing BENCH_baseline.json").
+
+CI wiring: the ``bench-smoke`` job runs this after two ``benchmarks.run
+--smoke --json`` passes; apply the ``bench-regression-ok`` PR label to
+skip the gate for an intentional, explained regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import statistics
+import sys
+
+
+def _canon(name: str) -> str:
+    return re.sub(r"\([^()]*\)$", "", name)
+
+
+def _canon_rows(rows: dict) -> dict:
+    return {_canon(k): v for k, v in rows.items()}
+
+
+def _is_ratio(name: str) -> bool:
+    return "_vs_" in name or name.endswith("/ratio")
+
+
+def _is_bookkeeping(name: str, value) -> bool:
+    return "cache=" in name or not isinstance(value, (int, float))
+
+
+def _merge(runs: list[dict], pick) -> dict:
+    """Merge several runs per canonical metric with ``pick(values)``."""
+    vals: dict = {}
+    for run in runs:
+        for bench, rows in run.get("benchmarks", {}).items():
+            dst = vals.setdefault(bench, {})
+            for name, val in _canon_rows(rows).items():
+                dst.setdefault(name, []).append(val)
+    out: dict = {"benchmarks": {}}
+    for bench, rows in vals.items():
+        out["benchmarks"][bench] = {
+            name: (vs[0] if _is_bookkeeping(name, vs[0]) else pick(name, vs))
+            for name, vs in rows.items()}
+    for k in ("schema", "mode", "backend"):
+        if runs and k in runs[0]:
+            out[k] = runs[0][k]
+    return out
+
+
+def merge_best(runs: list[dict]) -> dict:
+    """Per-metric best (min time / max ratio) across several runs —
+    the CURRENT-side estimator: timing noise is one-sided, so the fastest
+    observation is the least-noisy one."""
+    return _merge(runs, lambda name, vs: max(vs) if _is_ratio(name)
+                  else min(vs))
+
+
+def merge_median(runs: list[dict]) -> dict:
+    """Per-metric median across several runs — the BASELINE estimator.
+    Several microbenches are bimodal ACROSS PROCESS INVOCATIONS (allocator
+    / frequency luck), so a single-run baseline can freeze a lucky-fast
+    mode no later run reaches; the median over separate invocations is a
+    typical-mode reference the best-of-N current side can always match.
+
+    Each metric's cross-run SPREAD (max/min over the refresh runs) is
+    recorded under ``"spreads"``; the gate widens that metric's tolerance
+    by the spread so its own observed bimodality cannot fail CI, while a
+    regression larger than noise + threshold still does — noisy metrics
+    get a wider band, not a free pass.  Spread applies to ratio metrics
+    too (a throughput-derived ratio like ``continuous_vs_static`` is as
+    bimodal as its timings; a deterministic one like
+    ``paged_vs_strip_concurrency`` has spread 1 and stays tight)."""
+    out = _merge(runs, lambda name, vs: statistics.median(vs))
+    # the committed baseline must not accrete ephemeral bookkeeping rows
+    # (e.g. autotune cache= tmp paths — one fresh random key per run)
+    for bench in list(out["benchmarks"]):
+        out["benchmarks"][bench] = {
+            name: val for name, val in out["benchmarks"][bench].items()
+            if not _is_bookkeeping(name, val)}
+        if not out["benchmarks"][bench]:
+            del out["benchmarks"][bench]
+    vals: dict = {}
+    for run in runs:
+        for bench, rows in run.get("benchmarks", {}).items():
+            for name, val in _canon_rows(rows).items():
+                vals.setdefault((bench, name), []).append(val)
+    out["spreads"] = {
+        f"{bench}/{name}": round(max(vs) / min(vs), 3)
+        for (bench, name), vs in sorted(vals.items())
+        if not _is_bookkeeping(name, vs[0]) and len(vs) >= 2
+        and min(vs) > 0 and max(vs) / min(vs) > 1.0}
+    return out
+
+
+MIN_CAL_METRICS = 5      # below this the median is not a machine-speed
+                         # estimate — a single regressing metric would
+                         # dominate it and mask itself
+MAX_SPREAD_TOL = 1.0     # cap on spread-widened tolerance: even the
+                         # noisiest metric stays gated at threshold+100%
+
+
+def calibration(baseline: dict, current: dict, min_us: float) -> float:
+    """Median machine-speed shift across all time metrics, clamped >= 1."""
+    ratios = []
+    for bench, base_rows in baseline.get("benchmarks", {}).items():
+        cur_rows = current.get("benchmarks", {}).get(bench, {})
+        for name, base in _canon_rows(base_rows).items():
+            cur = cur_rows.get(name)
+            if (_is_bookkeeping(name, base) or _is_ratio(name)
+                    or not isinstance(cur, (int, float)) or base < min_us):
+                continue
+            ratios.append(cur / base)
+    if len(ratios) < MIN_CAL_METRICS:
+        return 1.0
+    return max(1.0, statistics.median(ratios))
+
+
+def compare(baseline: dict, current: dict, *, threshold: float,
+            min_us: float) -> tuple[list[str], list[str], float]:
+    """Returns (failures, notes, calibration_factor)."""
+    cal = calibration(baseline, current, min_us)
+    spreads = baseline.get("spreads", {})
+    failures, notes = [], []
+    for bench, base_rows in sorted(baseline.get("benchmarks", {}).items()):
+        cur_rows = current.get("benchmarks", {}).get(bench)
+        if cur_rows is None:
+            failures.append(f"{bench}: benchmark missing from current run")
+            continue
+        base_rows = _canon_rows(base_rows)
+        for name, base in sorted(base_rows.items()):
+            if _is_bookkeeping(name, base):
+                continue
+            cur = cur_rows.get(name)
+            if cur is None:
+                failures.append(f"{bench}: metric {name!r} missing")
+                continue
+            if not isinstance(cur, (int, float)):
+                failures.append(f"{bench}: {name} became non-numeric "
+                                f"({cur!r})")
+                continue
+            # per-metric tolerance: the gate threshold widened by the
+            # metric's own baseline spread — observed bimodality cannot
+            # fail CI, a regression beyond noise + threshold still does.
+            # The widening is capped (+MAX_SPREAD_TOL): a metric so noisy
+            # its runs disagree 10x must not become ungateable — past the
+            # cap, order-of-magnitude regressions still fail.
+            tol = threshold + min(MAX_SPREAD_TOL,
+                                  max(0.0,
+                                      spreads.get(f"{bench}/{name}", 1.0)
+                                      - 1.0))
+            wide = (f" (tolerance {tol:.0%}: baseline spread "
+                    f"{spreads[f'{bench}/{name}']:.2f}x)"
+                    if tol > threshold else "")
+            if _is_ratio(name):
+                if base > 0 and cur < base * (1.0 - min(tol, 0.95)):
+                    failures.append(
+                        f"{bench}: {name} ratio fell {base:.3f} -> "
+                        f"{cur:.3f}{wide}")
+                continue
+            norm = cur / cal
+            if base < min_us:
+                if norm > base * (1.0 + tol):
+                    notes.append(
+                        f"{bench}: {name} {base:.1f}us -> {cur:.1f}us "
+                        f"(below --min-us {min_us:g} noise floor; ignored)")
+                continue
+            if norm > base * (1.0 + tol):
+                failures.append(
+                    f"{bench}: {name} slowed {base:.1f}us -> {cur:.1f}us "
+                    f"({norm:.1f}us at calibration {cal:.2f}x"
+                    f"{wide or f'; > {threshold:.0%} regression'})")
+    return failures, notes, cal
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("baseline", help="committed BENCH_baseline.json (with "
+                                    "--refresh-baseline: the OUTPUT path)")
+    p.add_argument("current", nargs="+",
+                   help="fresh benchmarks.run --json output(s); several "
+                        "runs merge best-of-N per metric")
+    p.add_argument("--threshold", type=float, default=0.30,
+                   help="relative regression tolerance (default 0.30)")
+    p.add_argument("--min-us", type=float, default=100.0,
+                   help="time metrics under this many us never fail "
+                        "(sub-noise at smoke scale; default 100)")
+    p.add_argument("--refresh-baseline", action="store_true",
+                   help="write BASELINE as the per-metric MEDIAN of the "
+                        "given runs instead of gating (run the smoke 3x "
+                        "and merge — a single run can freeze a lucky-fast "
+                        "bimodal mode)")
+    args = p.parse_args(argv)
+
+    runs = []
+    for path in args.current:
+        with open(path) as f:
+            runs.append(json.load(f))
+    if args.refresh_baseline:
+        merged = merge_median(runs)
+        with open(args.baseline, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        n = sum(len(v) for v in merged["benchmarks"].values())
+        print(f"wrote {args.baseline}: median of {len(runs)} run(s), "
+              f"{n} metrics")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    current = merge_best(runs)
+    if baseline.get("mode") != current.get("mode"):
+        print(f"warning: comparing mode={baseline.get('mode')} baseline "
+              f"against mode={current.get('mode')} run", file=sys.stderr)
+
+    failures, notes, cal = compare(baseline, current,
+                                   threshold=args.threshold,
+                                   min_us=args.min_us)
+    if cal > 1.5:
+        print(f"warning: machine-speed calibration {cal:.2f}x vs the "
+              "baseline run — uniform slowdowns this large are invisible "
+              "to the gate; consider refreshing BENCH_baseline.json",
+              file=sys.stderr)
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s) vs "
+              f"{args.baseline} (calibration {cal:.2f}x, best of "
+              f"{len(runs)} run(s)):")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        print("\nIf intentional: refresh the baseline (docs/serving.md) or "
+              "apply the 'bench-regression-ok' PR label.")
+        return 1
+    n_metrics = sum(len(v) for v in baseline.get("benchmarks", {}).values())
+    print(f"benchmark gate OK ({n_metrics} baseline metrics, threshold "
+          f"{args.threshold:.0%}, floor {args.min_us:g}us, calibration "
+          f"{cal:.2f}x, best of {len(runs)} run(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

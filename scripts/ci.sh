@@ -7,12 +7,19 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Lint (config in pyproject.toml).  CI installs ruff; locally we skip with a
-# warning rather than fail on envs that only have jax+pytest.
+# Lint + format check (config in pyproject.toml).  CI installs ruff;
+# locally we skip with a warning rather than fail on envs that only have
+# jax+pytest.  The format check is ADVISORY for now: the tree predates
+# ruff-format and the dev container ships no ruff binary to run the
+# one-time `ruff format .` pass — flip the `|| echo` to a hard failure
+# after that pass lands.
 if command -v ruff >/dev/null 2>&1; then
     ruff check .
+    ruff format --check . \
+        || echo "warning: tree is not ruff-format clean (advisory until" \
+                "a one-time 'ruff format .' pass lands)" >&2
 else
-    echo "warning: ruff not installed; skipping lint" >&2
+    echo "warning: ruff not installed; skipping lint/format check" >&2
 fi
 
 # Guard against a silently-green run: an import failure or a wrong

@@ -36,7 +36,10 @@ from repro.core.softmax_api import _ALGOS, SoftmaxAlgorithm
 # softmax operand; they take the attention-specific overrides below.
 # flash/chunk axes are (Sq, Skv); decode_attention axes are (slots, Skv) —
 # each slot carries exactly one query, so the "q axis" is the slot axis.
-ATTENTION_OPS = ("flash_attention", "chunk_attention", "decode_attention")
+# decode_attention_paged shares that layout with cols = logical positions
+# (page-table width * page size).
+ATTENTION_OPS = ("flash_attention", "chunk_attention", "decode_attention",
+                 "decode_attention_paged")
 
 
 @dataclass(frozen=True)

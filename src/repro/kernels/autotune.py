@@ -94,6 +94,15 @@ def _runner_for(op: str) -> Callable:
             return ops.decode_attention(q, k, v, lengths,
                                         block_s=br, block_t=bc)
         return run
+    if op == "decode_attention_paged":
+        # paged serving decode: same axes, but K/V gathered through a page
+        # table from a shared arena; block_t rounds to whole pages inside
+        # the wrapper.
+        def run(args, br, bc):
+            q, kp, vp, pt, lengths = args
+            return ops.decode_attention_paged(q, kp, vp, pt, lengths,
+                                              block_s=br, block_t=bc)
+        return run
     if op == "chunk_attention":
         # chunked-jnp path: blocks are chunk LENGTHS; counts are the same
         # ceil-div + unroll clamp models.attention.resolve_chunks applies.
@@ -116,8 +125,32 @@ def _runner_for(op: str) -> Callable:
                      f"(registered: {registry.registered_ops()})")
 
 
+ATTN_PAGE_SIZE = 64      # fixed proxy page size for the paged decode sweep
+
+
 def _inputs_for(op: str, rows: int, cols: int, dtype):
     key = jax.random.PRNGKey(0)
+    if op == "decode_attention_paged":
+        # rows/cols are (slots, logical cache positions); a fully-backed
+        # arena with a shuffled page table — the gather is part of what is
+        # timed.
+        import numpy as np
+
+        ks = jax.random.split(key, 3)
+        d, ps = ATTN_HEAD_DIM, ATTN_PAGE_SIZE
+        pmax = -(-cols // ps)
+        pages = 1 + rows * pmax
+        kp = jax.random.normal(ks[0], (pages, ps, ATTN_HEADS, d)).astype(
+            dtype)
+        vp = jax.random.normal(ks[1], (pages, ps, ATTN_HEADS, d)).astype(
+            dtype)
+        q = jax.random.normal(ks[2], (rows, ATTN_HEADS, 1, d)).astype(dtype)
+        pt = jax.numpy.asarray(
+            np.random.default_rng(0).permutation(
+                np.arange(1, pages)).reshape(rows, pmax).astype(np.int32))
+        lengths = jax.random.randint(jax.random.PRNGKey(1), (rows,), 1,
+                                     pmax * ps + 1)
+        return (q, kp, vp, pt, lengths)
     if op == "decode_attention":
         # rows/cols are (slots, cache positions); mixed-age pool via random
         # per-slot lengths — the masking work is part of what is timed.
@@ -209,6 +242,8 @@ DEFAULT_SWEEP = (
     ("chunk_attention", 2048, 2048),
     # serving decode: an 8-slot pool against a 4K cache (rows=slots, cols=T)
     ("decode_attention", 8, 4096),
+    # paged serving decode: same pool, KV gathered through the page table
+    ("decode_attention_paged", 8, 4096),
 )
 
 

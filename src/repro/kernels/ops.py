@@ -221,6 +221,47 @@ MAX_T_CHUNKS = 16            # unrolled; counts bound the traced HLO size)
 _NEG_INF = -jnp.inf
 
 
+def _mn_mask_update(acc, q_blk, k_chunk, v_chunk, kpos, l_blk, *,
+                    scale: float, window: int | None):
+    """One (m, n) online-softmax accumulation step of the single-query
+    decode sweep: score the chunk, apply the length/window mask, fold into
+    the running ``(o, m, n)`` accumulator (rescales are exact powers of two,
+    so chunks — and therefore pages — may be visited in any order).
+
+    The slot's query sits at position ``l_blk - 1`` (write-then-attend), so
+    the validity prefix IS the causal mask; SWA adds a lower bound relative
+    to that query position.
+    """
+    from repro.core import numerics
+
+    o_acc, m_acc, n_acc = acc
+    sco = jnp.einsum("shgd,shtd->shgt", q_blk, k_chunk) * scale
+    mask = kpos[None, :] < l_blk[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > l_blk[:, None] - 1 - window
+    sco = jnp.where(mask[:, None, None, :], sco, _NEG_INF)
+
+    m, n = numerics.ext_exp(sco)
+    n_loc = jnp.max(n, axis=-1, keepdims=True)
+    w = m * numerics.exp2_int(n - n_loc)
+    m_loc = jnp.sum(w, axis=-1, keepdims=True)
+    o_loc = jnp.einsum("shgt,shtd->shgd", w, v_chunk)
+
+    n_new = jnp.maximum(n_acc, n_loc)
+    a_acc = numerics.exp2_int(n_acc - n_new)
+    a_loc = numerics.exp2_int(n_loc - n_new)
+    return (o_acc * a_acc + o_loc * a_loc,
+            m_acc * a_acc + m_loc * a_loc, n_new)
+
+
+def _mn_init(bs: int, hkv: int, g: int, dv: int):
+    from repro.core import numerics
+
+    return (jnp.zeros((bs, hkv, g, dv), jnp.float32),
+            jnp.zeros((bs, hkv, g, 1), jnp.float32),
+            jnp.full((bs, hkv, g, 1), numerics.MINUS_INF_N))
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "window",
                                              "n_s_chunks", "n_t_chunks"))
 def _decode_attention_chunked(q, k, v, lengths, *, scale: float,
@@ -229,8 +270,6 @@ def _decode_attention_chunked(q, k, v, lengths, *, scale: float,
     """(m, n)-streamed single-query attention.  See :func:`decode_attention`
     for shapes.  ``lengths`` is traced (per-slot cache fill); chunk loops are
     Python-unrolled, so no chunk can be pruned at trace time."""
-    from repro.core import numerics
-
     s, hkv, g, d = q.shape
     t = k.shape[2]
     dv = v.shape[3]
@@ -246,40 +285,66 @@ def _decode_attention_chunked(q, k, v, lengths, *, scale: float,
         if bs == 0:
             continue
         l_blk = lens[i * sc:i * sc + bs]                  # [bs]
-        o_acc = jnp.zeros((bs, hkv, g, dv), jnp.float32)
-        m_acc = jnp.zeros((bs, hkv, g, 1), jnp.float32)
-        n_acc = jnp.full((bs, hkv, g, 1), numerics.MINUS_INF_N)
+        acc = _mn_init(bs, hkv, g, dv)
         for j in range(n_t_chunks):
             lo, hi = j * tc, min(t, (j + 1) * tc)
             if lo >= hi:
                 continue
-            sco = jnp.einsum("shgd,shtd->shgt", q_blk,
-                             kf[i * sc:i * sc + bs, :, lo:hi]) * scale
-            kpos = jnp.arange(lo, hi)
-            # The slot's query sits at position lens-1 (write-then-attend),
-            # so the validity prefix IS the causal mask; SWA adds a lower
-            # bound relative to that query position.
-            mask = kpos[None, :] < l_blk[:, None]
-            if window is not None:
-                mask &= kpos[None, :] > l_blk[:, None] - 1 - window
-            sco = jnp.where(mask[:, None, None, :], sco, _NEG_INF)
-
-            m, n = numerics.ext_exp(sco)
-            n_loc = jnp.max(n, axis=-1, keepdims=True)
-            w = m * numerics.exp2_int(n - n_loc)
-            m_loc = jnp.sum(w, axis=-1, keepdims=True)
-            o_loc = jnp.einsum("shgt,shtd->shgd", w,
-                               vf[i * sc:i * sc + bs, :, lo:hi])
-
-            n_new = jnp.maximum(n_acc, n_loc)
-            a_acc = numerics.exp2_int(n_acc - n_new)
-            a_loc = numerics.exp2_int(n_loc - n_new)
-            o_acc = o_acc * a_acc + o_loc * a_loc
-            m_acc = m_acc * a_acc + m_loc * a_loc
-            n_acc = n_new
+            acc = _mn_mask_update(
+                acc, q_blk, kf[i * sc:i * sc + bs, :, lo:hi],
+                vf[i * sc:i * sc + bs, :, lo:hi], jnp.arange(lo, hi),
+                l_blk, scale=scale, window=window)
         # Fully-masked slots (length 0: a free pool slot) have m_acc == 0;
         # the max() guard turns their output into exact zeros, not NaN.
-        outs.append(o_acc / jnp.maximum(m_acc, 1e-37))
+        outs.append(acc[0] / jnp.maximum(acc[1], 1e-37))
+    return jnp.concatenate(outs, axis=0).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window",
+                                             "n_s_chunks", "n_t_chunks"))
+def _decode_attention_paged_chunked(q, k_pages, v_pages, page_table, lengths,
+                                    *, scale: float, window: int | None,
+                                    n_s_chunks: int, n_t_chunks: int):
+    """Paged variant of :func:`_decode_attention_chunked`: K/V live in a
+    shared page arena and are gathered per t-chunk through the per-slot page
+    table, so only a chunk's worth of contiguous KV ever materializes.  The
+    (m, n) accumulation is order-free (power-of-two rescales), which is what
+    lets the sweep visit arena pages in whatever order the table holds."""
+    s, hkv, g, d = q.shape
+    ps = k_pages.shape[1]                 # tokens per page
+    pmax = page_table.shape[1]            # pages per slot (logical T / ps)
+    dv = v_pages.shape[3]
+    qf = q.astype(jnp.float32)
+    lens = lengths.astype(jnp.int32)
+
+    sc = -(-s // n_s_chunks)
+    pc = -(-pmax // n_t_chunks)           # whole pages per t-chunk
+    outs = []
+    for i in range(n_s_chunks):
+        q_blk = qf[i * sc:(i + 1) * sc]
+        bs = q_blk.shape[0]
+        if bs == 0:
+            continue
+        l_blk = lens[i * sc:i * sc + bs]
+        pt_blk = page_table[i * sc:i * sc + bs]          # [bs, pmax]
+        acc = _mn_init(bs, hkv, g, dv)
+        for j in range(n_t_chunks):
+            p0, p1 = j * pc, min(pmax, (j + 1) * pc)
+            if p0 >= p1:
+                continue
+            npg = p1 - p0
+            # Gather this chunk's pages: [bs, npg, ps, hkv, *] -> the
+            # contiguous [bs, hkv, npg * ps, *] layout the sweep consumes.
+            # Free/trash pages surface garbage, killed by the length mask.
+            pt = pt_blk[:, p0:p1]
+            kc = k_pages[pt].reshape(bs, npg * ps, hkv, d)
+            vc = v_pages[pt].reshape(bs, npg * ps, hkv, dv)
+            acc = _mn_mask_update(
+                acc, q_blk, kc.transpose(0, 2, 1, 3).astype(jnp.float32),
+                vc.transpose(0, 2, 1, 3).astype(jnp.float32),
+                jnp.arange(p0 * ps, p1 * ps), l_blk,
+                scale=scale, window=window)
+        outs.append(acc[0] / jnp.maximum(acc[1], 1e-37))
     return jnp.concatenate(outs, axis=0).astype(q.dtype)
 
 
@@ -314,6 +379,45 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         n_t_chunks=min(MAX_T_CHUNKS, -(-t // bt)))
 
 
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *, scale: float | None = None,
+                           window: int | None = None,
+                           block_s: int | None = None,
+                           block_t: int | None = None,
+                           policy=None) -> jax.Array:
+    """Single-query attention against a PAGED KV cache.
+
+    q: [S, Hkv, G, D]; k_pages: [P, ps, Hkv, D]; v_pages: [P, ps, Hkv, Dv]
+    (the shared page arenas of ``kv_cache.init_paged_pool``, one row per
+    page of ``ps`` tokens); page_table: [S, Pmax] int32 — arena page ids
+    backing each slot's logical positions ``[p * ps, (p + 1) * ps)``;
+    lengths: [S] int32 valid-prefix per slot (position ``lengths - 1`` holds
+    the slot's own query; 0 marks a free slot, output exact zeros).  Returns
+    [S, Hkv, G, Dv], identical to :func:`decode_attention` over the
+    contiguous cache the table describes.
+
+    Registry resolution: rows = S, cols = Pmax * ps (logical positions);
+    the resolved col block is rounded DOWN to whole pages so every t-chunk
+    gathers full pages through the table.  Entries of the table that back
+    no valid position (a free slot, or pages past ``lengths``) may point
+    anywhere — the length mask makes their content invisible.
+    """
+    s, _, _, d = q.shape
+    ps = k_pages.shape[1]
+    pmax = page_table.shape[1]
+    t = pmax * ps
+    bs, bt = _blocks("decode_attention_paged", s, t, q.dtype, block_s,
+                     block_t, policy)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    pages_per_chunk = max(1, bt // ps)
+    return _decode_attention_paged_chunked(
+        q, k_pages, v_pages, page_table, lengths, scale=scale, window=window,
+        n_s_chunks=min(MAX_SLOT_CHUNKS, -(-s // bs)),
+        n_t_chunks=min(MAX_T_CHUNKS, -(-pmax // pages_per_chunk)))
+
+
 def logsumexp_stats(x: jax.Array, block_rows: int | None = None,
                     block_cols: int | None = None, policy=None):
     """Pass-1 stats (m_sum, n_sum) for 2-D x via the Pallas kernel."""
@@ -334,3 +438,4 @@ registry.bind("logsumexp", _tp2.twopass_stats_2d)
 registry.bind("xent", _xent.xent_fwd_2d)
 registry.bind("flash_attention", _fa.flash_attention_gqa)
 registry.bind("decode_attention", _decode_attention_chunked)
+registry.bind("decode_attention_paged", _decode_attention_paged_chunked)

@@ -149,10 +149,10 @@ def save_cache(path: str | None = None) -> str:
     return p
 
 
-def record_tuned(op: str, rows: int, cols: int, dtype, blocks: tuple[int,
-                                                                     int],
-                 *, backend: str | None = None, meta: dict | None = None,
-                 path: str | None = None, persist: bool = True) -> str:
+def record_tuned(op: str, rows: int, cols: int, dtype,
+                 blocks: tuple[int, int], *, backend: str | None = None,
+                 meta: dict | None = None, path: str | None = None,
+                 persist: bool = True) -> str:
     """Stores a tuned block shape; returns the cache key."""
     backend = backend or jax.default_backend()
     key = cache_key(op, rows, cols, dtype, backend)
@@ -216,9 +216,9 @@ def block_shapes(op: str, rows: int, cols: int, dtype=jax.numpy.float32, *,
     return br, bc
 
 
-def candidate_blocks(op: str, rows: int, cols: int, *,
-                     vmem_budget_bytes: int | None = None) -> list[tuple[int,
-                                                                         int]]:
+def candidate_blocks(
+        op: str, rows: int, cols: int, *,
+        vmem_budget_bytes: int | None = None) -> list[tuple[int, int]]:
     """Autotune sweep candidates: aligned tiles around the heuristic point,
     bounded by the spec's double-buffered f32 working-set budget."""
     spec = get_spec(op)
@@ -284,6 +284,25 @@ register(KernelSpec(name="decode_attention", row_align=8, row_cap=256,
                     col_align=128, col_cap=2048, full_col_threshold=4096,
                     tune_row_cap=256, tune_col_cap=4096,
                     sweep_budget_bytes=64 << 20))
+# paged decode attention (ops.decode_attention_paged): the same single-query
+# (m, n) sweep, but K/V are gathered through a per-slot page table from a
+# shared page arena (serving/kv_cache.init_paged_pool) instead of read from
+# a contiguous slot strip.  rows = slots, cols = LOGICAL cache positions
+# (page_table width * page size); the resolved col block is rounded to a
+# whole number of pages so every gather touches full pages.
+register(KernelSpec(name="decode_attention_paged", row_align=8, row_cap=256,
+                    col_align=128, col_cap=2048, full_col_threshold=4096,
+                    tune_row_cap=256, tune_col_cap=4096,
+                    sweep_budget_bytes=64 << 20))
+# KV-cache page size (serving/kv_cache.resolve_page_size): cols model the
+# TOKENS PER PAGE of the paged pool — the granularity requests allocate
+# cache in.  Resolution runs the standard chain (explicit page_size= >
+# autotune cache > heuristic); the heuristic is the classic 128-token page,
+# shrunk to the pool's own padded length for tiny pools so smoke-sized
+# configs don't round a 24-token cache up to a 128-token page.
+register(KernelSpec(name="kv_page", row_align=1, row_cap=1,
+                    col_align=16, col_cap=128, full_col_threshold=0,
+                    tune_col_cap=512))
 
 
 def bind(op: str, fn: Callable) -> None:

@@ -23,6 +23,16 @@ def main():
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--slots", type=int, default=4,
                    help="cache-slot pool size (concurrent sequences)")
+    p.add_argument("--strip", action="store_true",
+                   help="force the slot-major strip pool (paged pool is "
+                        "the default wherever the family supports it)")
+    p.add_argument("--page-size", type=int, default=None,
+                   help="tokens per KV page (default: kernel-registry "
+                        "resolution, 128-token heuristic)")
+    p.add_argument("--pages", type=int, default=None,
+                   help="arena page count incl. the trash page (default: "
+                        "full provisioning; fewer = oversubscribe, "
+                        "preempt on OOM)")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--arrival-rate", type=float, default=None,
                    help="Poisson request arrivals per second "
@@ -73,7 +83,9 @@ def main():
         eng = model.serving_engine(
             params, slots=args.slots,
             max_len=args.prompt_len + args.steps + 8,
-            temperature=args.temperature, seed=2)
+            temperature=args.temperature, seed=2,
+            paged=False if args.strip else "auto",
+            page_size=args.page_size, pages=args.pages)
         rng = np.random.default_rng(0)
         arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                               args.requests))
@@ -86,9 +98,14 @@ def main():
                 for i in range(args.requests)]
         comps = eng.run(reqs)
         st = eng.stats
+        pool = (f"paged pool ({eng.allocator.usable_pages} pages x "
+                f"{eng.page_size} tok, peak {st['peak_pages']} in use, "
+                f"{st['preempted']} preempted)" if eng.paged
+                else "strip pool")
         print(f"{args.arch}: served {len(comps)} requests over "
-              f"{args.slots} slots ({st['steps']} ragged decode steps, "
-              f"{st['admitted']} admissions)")
+              f"{args.slots} slots / {pool} ({st['steps']} ragged decode "
+              f"steps, {st['admitted']} admissions, "
+              f"{len(eng._prefill_shapes)} prefill bucket compiles)")
         print("sample row:", comps[0].tokens[:16])
 
     pre = st["prefill_tokens"] / max(st["prefill_s"], 1e-9)

@@ -246,14 +246,18 @@ def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
               tp: int = 1, causal: bool = True, cache: dict | None = None,
               cache_pos=None, xkv: jax.Array | None = None,
               use_rope: bool = True, window_override: int | str = "cfg",
-              ring_valid=None, cache_positions=None):
+              ring_valid=None, cache_positions=None, page_table=None):
     """GQA attention.  x: [B, S, d].  ``xkv`` switches to cross-attention
     (kv from encoder states, no rope/causal).  With ``cache`` (+``cache_pos``
     traced scalar): write-then-attend over the cache.  ``cache_positions``
     ([B] traced int32, requires S == 1) switches to the ragged
     continuous-batching decode path: each slot writes at its own position
     and attends its own valid prefix through the ``decode_attention``
-    registry op.  Returns (out, new_cache)."""
+    registry op.  ``page_table`` ([B, Pmax] int32, with ``cache_positions``)
+    switches the ragged path to a PAGED cache: ``cache`` leaves are page
+    arenas ``[P, ps, Hkv, hd]``, writes scatter through the table, and
+    attention runs through ``decode_attention_paged``.  Returns
+    (out, new_cache)."""
     b, s, d = x.shape
     hd = cfg.resolved_head_dim()
     hq, grouped, _, head_to_kv = head_layout(cfg, tp)
@@ -285,6 +289,34 @@ def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
             raise NotImplementedError(
                 "decode_seq_parallel does not compose with ragged decode")
         from repro.kernels import ops as kernel_ops  # lazy: kernels optional
+
+        if page_table is not None:
+            # Paged ragged decode: scatter this token's K/V through the
+            # page table, attend through the page-gathering op.  Free slots
+            # (table rows all trash) scatter into the trash page.
+            ps = cache["k"].shape[1]
+            t_logical = page_table.shape[1] * ps
+            wpos = jnp.minimum(cache_positions.astype(jnp.int32),
+                               t_logical - 1)
+            pg = jnp.take_along_axis(page_table, (wpos // ps)[:, None],
+                                     axis=1)[:, 0]
+            off = wpos % ps
+            ck = cache["k"].at[pg, off].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[pg, off].set(v[:, 0].astype(cache["v"].dtype))
+            kk = hint(ck, None, None, "tp", None)
+            vv = hint(cv, None, None, "tp", None)
+            if grouped:
+                qg = hint(q[:, 0].reshape(b, hkv, hq // hkv, hd),
+                          "dp", "tp", None, None)
+            else:                                  # kv expanded per q-head
+                kk = kk[:, :, head_to_kv]
+                vv = vv[:, :, head_to_kv]
+                qg = hint(q[:, 0][:, :, None], "dp", "tp", None, None)
+            o = kernel_ops.decode_attention_paged(
+                qg, kk, vv, page_table, wpos + 1, scale=hd ** -0.5,
+                window=window, policy=cfg.softmax_policy())
+            o = hint(o.reshape(b, 1, hq * hd), "dp", None, "tp")
+            return layers.dense(p["wo"], o), {"k": ck, "v": cv}
 
         wpos = jnp.minimum(cache_positions.astype(jnp.int32),
                            cache["k"].shape[1] - 1)
@@ -397,11 +429,16 @@ def init_mla(key, cfg: ModelConfig, dtype, tp: int = 1) -> dict:
 
 def mla_attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
                   tp: int = 1, cache: dict | None = None, cache_pos=None,
-                  cache_positions=None):
+                  cache_positions=None, page_table=None):
     """MLA forward.  Cache stores only (c_latent, k_rope) — the compressed
     representation that is MLA's point; per-head K/V are re-expanded from the
     latent on read.  ``cache_positions`` ([B] traced, S == 1) is the ragged
-    continuous-batching decode path (per-slot write + length masking)."""
+    continuous-batching decode path (per-slot write + length masking); with
+    ``page_table`` the latent cache is PAGED (arenas ``[P, ps, rank]``):
+    writes scatter through the table and the slot-contiguous latent is
+    gathered back before the up-projection — the gathered bytes match what
+    the strip path materializes anyway, because the latent IS the
+    compressed cache."""
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.padded_heads(tp)
@@ -421,10 +458,28 @@ def mla_attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
         assert cache is not None and s == 1
         from repro.kernels import ops as kernel_ops  # lazy: kernels optional
 
-        wpos = jnp.minimum(cache_positions.astype(jnp.int32),
-                           cache["c"].shape[1] - 1)
-        cc = _update_rows_at(cache["c"], c, wpos)
-        ckr = _update_rows_at(cache["kr"], kr, wpos)
+        if page_table is not None:
+            # Paged latent cache: scatter the new (c, kr) row through the
+            # table, then gather the slot-contiguous latent for up-proj.
+            ps = cache["c"].shape[1]
+            t_logical = page_table.shape[1] * ps
+            wpos = jnp.minimum(cache_positions.astype(jnp.int32),
+                               t_logical - 1)
+            pg = jnp.take_along_axis(page_table, (wpos // ps)[:, None],
+                                     axis=1)[:, 0]
+            off = wpos % ps
+            ca = cache["c"].at[pg, off].set(c[:, 0].astype(cache["c"].dtype))
+            kra = cache["kr"].at[pg, off].set(
+                kr[:, 0].astype(cache["kr"].dtype))
+            new_cache = {"c": ca, "kr": kra}
+            cc = ca[page_table].reshape(b, t_logical, -1)     # [S, T, rank]
+            ckr = kra[page_table].reshape(b, t_logical, -1)
+        else:
+            wpos = jnp.minimum(cache_positions.astype(jnp.int32),
+                               cache["c"].shape[1] - 1)
+            cc = _update_rows_at(cache["c"], c, wpos)
+            ckr = _update_rows_at(cache["kr"], kr, wpos)
+            new_cache = {"c": cc, "kr": ckr}
         kv = layers.dense(p["wkv_b"], cc).reshape(b, cc.shape[1], h, nd + vd)
         kf = jnp.concatenate(
             [kv[..., :nd],
@@ -438,7 +493,7 @@ def mla_attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
             qg, kk, vv, wpos + 1, scale=(nd + rd) ** -0.5,
             policy=cfg.softmax_policy())
         o = hint(o.reshape(b, 1, h * vd), "dp", None, "tp")
-        return layers.dense(p["wo"], o), {"c": cc, "kr": ckr}
+        return layers.dense(p["wo"], o), new_cache
 
     new_cache = None
     kv_len = None

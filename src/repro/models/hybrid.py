@@ -94,7 +94,7 @@ def init_hybrid_block(key, cfg: ModelConfig, dtype, tp: int = 1) -> Params:
 
 def hybrid_block(p, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
                  cache: dict | None = None, cache_pos=None,
-                 ring_valid=None, cache_positions=None):
+                 ring_valid=None, cache_positions=None, page_table=None):
     """Parallel attn ‖ mamba + MLP.  Returns (x, new_cache)."""
     single = x.ndim == 2
     xin = x[:, None] if single else x                # promote decode to S=1
@@ -105,7 +105,7 @@ def hybrid_block(p, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
     a, new_attn = attn_mod.attention(
         p["attn"], h, cos, sin, cfg=cfg, tp=tp, causal=True,
         cache=attn_cache, cache_pos=cache_pos, ring_valid=ring_valid,
-        cache_positions=cache_positions)
+        cache_positions=cache_positions, page_table=page_table)
     if single:
         m, new_ssm = mamba_mixer_step(p["mamba"], h[:, 0], cfg=cfg,
                                       state=ssm_state)

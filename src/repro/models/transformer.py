@@ -69,10 +69,12 @@ def init_block(key, cfg: ModelConfig, tp: int = 1, cross: bool = False,
 def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
                 cache=None, cache_pos=None, enc=None, causal: bool = True,
                 moe_impl: str = "dispatch", ring_valid=None,
-                cache_positions=None):
+                cache_positions=None, page_table=None):
     """One transformer block.  Returns (x, new_cache).  ``cache_positions``
     ([B] traced) selects the ragged continuous-batching decode path in the
-    attention mixers (per-slot write position + length masking)."""
+    attention mixers (per-slot write position + length masking);
+    ``page_table`` ([B, Pmax]) makes that path read/write a paged cache
+    (arena leaves + per-slot table — see kv_cache.init_paged_pool)."""
     if cfg.family == "ssm":
         if cache is None:
             return rwkv_mod.rwkv_block(p, x, cfg=cfg), None
@@ -84,7 +86,8 @@ def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
         return hybrid_mod.hybrid_block(p, x, cos, sin, cfg=cfg, tp=tp,
                                        cache=cache, cache_pos=cache_pos,
                                        ring_valid=ring_valid,
-                                       cache_positions=cache_positions)
+                                       cache_positions=cache_positions,
+                                       page_table=page_table)
 
     single = x.ndim == 2
     xin = x[:, None] if single else x
@@ -97,14 +100,16 @@ def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
         a, new_self = attn_mod.mla_attention(p["attn"], h, cos, sin, cfg=cfg,
                                              tp=tp, cache=self_cache,
                                              cache_pos=cache_pos,
-                                             cache_positions=cache_positions)
+                                             cache_positions=cache_positions,
+                                             page_table=page_table)
     else:
         a, new_self = attn_mod.attention(p["attn"], h, cos, sin, cfg=cfg,
                                          tp=tp, causal=causal,
                                          cache=self_cache,
                                          cache_pos=cache_pos,
                                          ring_valid=ring_valid,
-                                         cache_positions=cache_positions)
+                                         cache_positions=cache_positions,
+                                         page_table=page_table)
     x1 = xin + a
     new_cache: Any = new_self
     if "xattn" in p:

@@ -100,22 +100,26 @@ def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
     """One continuous-batching decode step over a slot pool.
 
     ``pool`` is ``kv_cache.init_slot_pool`` state: ``{"kv": stacked-layer
-    cache [L, S, ...], "lengths": int32[S]}``.  ``tokens``: [S] int32 (free
-    slots may carry any value).  ``active``: [S] bool (default ``lengths >
-    0``) — inactive slots still flow through the compute (their writes land
-    in dead cache rows and their logits are garbage) but their lengths do
+    cache [L, S, ...], "lengths": int32[S]}`` — or ``init_paged_pool``
+    state, whose extra ``"page_table"`` ([S, Pmax] int32) routes every
+    cache write/read through the page arena instead of slot strips.
+    ``tokens``: [S] int32 (free slots may carry any value).  ``active``:
+    [S] bool (default ``lengths > 0``) — inactive slots still flow through
+    the compute (their writes land in dead cache rows — the trash page,
+    for a paged pool — and their logits are garbage) but their lengths do
     not advance, so one jitted step serves any mix of sequence ages without
     recompilation.
 
     Returns (logits [S, V_padded], new_pool).  Per-slot positions are the
     current ``lengths`` (write-then-attend); attention masking runs through
-    the ``decode_attention`` registry op.
+    the ``decode_attention`` / ``decode_attention_paged`` registry op.
     """
     if cfg.family == "encdec":
         raise NotImplementedError(
             "continuous batching does not cover the fixed-dec_len "
             "encoder-decoder path")
     kv, lengths = pool["kv"], pool["lengths"]
+    page_table = pool.get("page_table")
     s = tokens.shape[0]
     if active is None:
         active = lengths > 0
@@ -136,20 +140,34 @@ def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
             pl, cl = xs
             h2, new_c = transformer.block_apply(
                 pl, h, cos, sin, cfg=cfg, tp=tp, cache=cl,
-                cache_positions=lengths, moe_impl=moe_impl)
+                cache_positions=lengths, moe_impl=moe_impl,
+                page_table=page_table)
             return h2, new_c
 
     h, new_kv = _layer_loop(cfg, body, x, (params["blocks"], kv))
     h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
     logits = transformer.lm_logits(params, h, cfg=cfg)
     new_lengths = jnp.where(active, lengths + 1, lengths)
-    return logits, {"kv": new_kv, "lengths": new_lengths}
+    new_pool = {"kv": new_kv, "lengths": new_lengths}
+    if page_table is not None:
+        new_pool["page_table"] = page_table
+    return logits, new_pool
 
 
 def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
             max_len: int | None = None, patches=None, frames=None,
-            moe_impl: str = "dispatch"):
+            moe_impl: str = "dispatch", last_pos=None):
     """Process the full prompt, return (last-token logits, filled cache).
+
+    ``last_pos`` ([B] or scalar traced int32): index of the TRUE last
+    prompt token on the token axis (patch prefix included, if any) —
+    bucketed prefill pads prompts to a small set of lengths so admission
+    compiles once per bucket, and the pad tail sits causally AFTER the real
+    prompt, so logits are read at ``last_pos`` instead of ``-1`` (cache
+    rows past the true length are garbage the pool's length mask hides).
+    Default None keeps the unpadded ``h[:, -1]`` read.  Not meaningful for
+    recurrent state (ssm family): padding would pollute the state itself,
+    so those prompts must prefill unpadded.
 
     For encdec: ``frames`` go through the encoder; cross-kv is computed once
     and stored; ``tokens`` are the decoder prompt.
@@ -159,6 +177,12 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
                                      and patches is not None) else 0)
     max_len = max(max_len or 0, total_s)
     cache = kv_cache.init_cache(cfg, b, max_len, tp, ring=False)
+
+    def _last(h):
+        if last_pos is None:
+            return h[:, -1]
+        return h[jnp.arange(b), jnp.broadcast_to(
+            jnp.asarray(last_pos, jnp.int32), (b,))]
 
     if cfg.family == "encdec":
         enc = transformer.encode(params, frames, cfg=cfg, tp=tp)
@@ -190,7 +214,7 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
 
         h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
         h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
-        logits = transformer.lm_logits(params, h[:, -1], cfg=cfg)
+        logits = transformer.lm_logits(params, _last(h), cfg=cfg)
         return logits, new_cache
 
     # dense / moe / hybrid / vlm: run blocks with cache write at pos 0..s.
@@ -212,7 +236,7 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
 
     h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
     h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
-    logits = transformer.lm_logits(params, h[:, -1], cfg=cfg)
+    logits = transformer.lm_logits(params, _last(h), cfg=cfg)
     return logits, new_cache
 
 

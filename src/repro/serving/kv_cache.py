@@ -20,6 +20,18 @@ the batch axis becomes a fixed pool of request slots, plus a per-slot
 slot; it is also the next write position, and the length-mask makes stale
 entries from an evicted request invisible to the next occupant until they
 are overwritten).
+
+The PAGED pool (:func:`init_paged_pool`) replaces the slot-major ``max_len``
+strips with a fixed arena of fixed-size pages plus a per-slot page table:
+capacity is bounded by *total tokens in flight*, not ``slots × max_len``.
+This is the paper's online (m, n) accumulation put to work — because the
+running max/sum rescales are exact and order-free, decode attention can
+sweep a slot's KV through the page table in whatever arena order the pages
+landed, so pages are recycled individually (``PageAllocator``) instead of
+whole strips.  Arena page 0 is reserved as the TRASH page: free slots' table
+entries (and table entries past a slot's allocated pages) point at it, so
+the writes that inactive slots still issue inside the jitted step land in a
+row nothing ever reads validly.
 """
 
 from __future__ import annotations
@@ -132,6 +144,170 @@ def free_slot(pool: dict, slot) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Paged pool: page arena + per-slot page tables.
+# ---------------------------------------------------------------------------
+TRASH_PAGE = 0          # arena page 0: write target for dead/inactive rows
+
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """Families whose decode cache is position-addressed (pageable).  ssm
+    state has no position axis; encdec has no continuous-batching path at
+    all.  hybrid pages its attention half and keeps ssm state slot-major."""
+    return cfg.family not in ("ssm", "encdec")
+
+
+def resolve_page_size(cfg: ModelConfig, max_len: int,
+                      page_size: int | None = None) -> int:
+    """Tokens per page, resolved through the kernel registry's ``kv_page``
+    spec like any other block shape: explicit ``page_size`` > autotune
+    cache (when the config's policy opts in) > the 128-token heuristic,
+    shrunk to the pool's own padded length for tiny pools."""
+    if page_size is not None:
+        return int(page_size)
+    from repro.kernels import registry  # lazy: kernels are optional
+
+    pol = cfg.softmax_policy()
+    _, ps = registry.block_shapes("kv_page", 1, max_len, cache_dtype(cfg),
+                                  use_cache=pol.autotune,
+                                  cache_file=pol.autotune_cache)
+    return int(ps)
+
+
+def pages_per_slot(max_len: int, page_size: int) -> int:
+    """Page-table width: pages covering a slot's ``max_len`` positions."""
+    return -(-int(max_len) // int(page_size))
+
+
+def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
+                    *, page_size: int | None = None,
+                    pages: int | None = None) -> dict:
+    """A paged KV pool: shared page arena + per-slot page table.
+
+    Returns ``{"kv": <stacked-layer page arenas>, "page_table":
+    int32[slots, pages_per_slot], "lengths": int32[slots]}``.  Positional
+    cache leaves become arenas ``[L, pages, page_size, ...]``; hybrid's ssm
+    state (no position axis) stays slot-major ``[L, slots, ...]``.
+    ``pages`` defaults to full provisioning (``1 + slots * pages_per_slot``,
+    page 0 reserved as trash) — pass fewer to oversubscribe: capacity is
+    then bounded by total tokens in flight, the point of paging.  Table
+    entries init to the trash page; ``lengths`` semantics match the strip
+    pool (:func:`init_slot_pool`).
+    """
+    if not supports_paging(cfg):
+        raise ValueError(f"family {cfg.family!r} has no pageable cache")
+    ps = resolve_page_size(cfg, max_len, page_size)
+    n_tab = pages_per_slot(max_len, ps)
+    if pages is None:
+        pages = 1 + slots * n_tab
+    dt = cache_dtype(cfg)
+    hd = cfg.resolved_head_dim()
+    ls = cfg.n_layers
+
+    if cfg.mla is not None:
+        m = cfg.mla
+        kv = {"c": jnp.zeros((ls, pages, ps, m.kv_lora_rank), dt),
+              "kr": jnp.zeros((ls, pages, ps, m.qk_rope_head_dim), dt)}
+    elif cfg.family == "hybrid":
+        h = cfg.d_model // cfg.ssm.head_dim
+        kv = {"attn": {
+                  "k": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt),
+                  "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt)},
+              "ssm": jnp.zeros((ls, slots, h, cfg.ssm.state_size,
+                                cfg.ssm.head_dim), jnp.float32)}
+    else:                                          # dense / moe / vlm
+        kv = {"k": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt),
+              "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt)}
+    return {"kv": kv,
+            "page_table": jnp.zeros((slots, n_tab), jnp.int32),
+            "lengths": jnp.zeros((slots,), jnp.int32)}
+
+
+def _copy_pages(dst, src, page_row):
+    """Scatter a batch=1 position-major prefill cache ``[L, 1, T, ...]``
+    into arena pages ``[L, P, ps, ...]`` at the table row's ids.  T must be
+    a whole number of pages (bucketed prefill guarantees it); source pages
+    past the table width — a bucket wider than the slot — are dropped, and
+    table entries past the allocated count are trash (their copies land in
+    the trash page, garbage over garbage)."""
+    ls, _, ps = dst.shape[:3]
+    n_src = src.shape[2] // ps
+    n_copy = min(n_src, page_row.shape[0])
+    srcp = src[:, 0].reshape(ls, n_src, ps, *src.shape[3:])[:, :n_copy]
+    return dst.at[:, page_row[:n_copy]].set(srcp.astype(dst.dtype))
+
+
+def adopt_slot_paged(pool: dict, cache, slot, length, page_row) -> dict:
+    """Admit a freshly prefilled batch=1 cache into ``slot`` of a paged
+    pool.  ``page_row`` is the slot's FULL page-table row (int32
+    ``[pages_per_slot]``): the first ``ceil(length / ps)`` entries are the
+    allocated arena pages, the rest the trash page.  ``cache`` must come
+    from ``engine.prefill`` with a position allocation that is a multiple
+    of the page size.  jit-safe: ``slot``/``length``/``page_row`` may be
+    traced (shapes are static)."""
+    kv = pool["kv"]
+    if "attn" in kv:                               # hybrid: ssm slot-major
+        new_kv = {
+            "attn": {n: _copy_pages(kv["attn"][n], cache["attn"][n],
+                                    page_row) for n in ("k", "v")},
+            "ssm": jax.lax.dynamic_update_slice_in_dim(
+                kv["ssm"], cache["ssm"].astype(kv["ssm"].dtype), slot,
+                axis=1)}
+    else:
+        new_kv = {n: _copy_pages(kv[n], cache[n], page_row) for n in kv}
+    return {"kv": new_kv,
+            "page_table": pool["page_table"].at[slot].set(
+                page_row.astype(jnp.int32)),
+            "lengths": pool["lengths"].at[slot].set(
+                jnp.asarray(length, jnp.int32))}
+
+
+def free_slot_paged(pool: dict, slot) -> dict:
+    """Mark ``slot`` free: length 0, table row reset to the trash page (so
+    the dead writes the jitted step still issues for it can't corrupt pages
+    the allocator hands to someone else)."""
+    return {"kv": pool["kv"],
+            "page_table": pool["page_table"].at[slot].set(TRASH_PAGE),
+            "lengths": pool["lengths"].at[slot].set(0)}
+
+
+def set_page_row(pool: dict, slot, page_row) -> dict:
+    """Update one slot's page-table row (page growth during decode)."""
+    return {**pool, "page_table": pool["page_table"].at[slot].set(
+        page_row.astype(jnp.int32))}
+
+
+class PageAllocator:
+    """Host-side free list over arena pages ``1 .. pages - 1`` (page 0 is
+    the trash page and is never handed out).  Device state never sees this —
+    the scheduler allocs/frees here and mirrors decisions into the pool's
+    page table."""
+
+    def __init__(self, pages: int):
+        self.n_pages = int(pages)
+        self._free = list(range(self.n_pages - 1, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1
+
+    def alloc(self, n: int) -> list[int] | None:
+        """``n`` distinct pages, or None (nothing allocated) if short."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, page_ids) -> None:
+        for p in page_ids:
+            assert 0 < p < self.n_pages, f"bad page id {p}"
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
 # Memory accounting (scheduler slot budgeting).
 # ---------------------------------------------------------------------------
 def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
@@ -158,3 +334,57 @@ def max_slots_in_budget(cfg: ModelConfig, max_len: int, budget_bytes: int,
     fixed = one - per_slot
     n = (budget_bytes - fixed) // per_slot
     return max(0, int(n))
+
+
+def paged_pool_bytes(cfg: ModelConfig, slots: int, max_len: int,
+                     tp: int = 1, *, page_size: int | None = None,
+                     pages: int | None = None) -> int:
+    """Total bytes of a paged pool (arenas + page table + lengths)."""
+    pool = jax.eval_shape(lambda: init_paged_pool(
+        cfg, slots, max_len, tp, page_size=page_size, pages=pages))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(pool))
+
+
+def max_pages_in_budget(cfg: ModelConfig, slots: int, max_len: int,
+                        budget_bytes: int, tp: int = 1, *,
+                        page_size: int | None = None) -> int:
+    """Largest arena page count (trash page included) whose pool fits
+    ``budget_bytes`` at the given slot count.  Pool bytes are affine in
+    the page count, so two shape evaluations determine the answer."""
+    one = paged_pool_bytes(cfg, slots, max_len, tp, page_size=page_size,
+                           pages=1)
+    two = paged_pool_bytes(cfg, slots, max_len, tp, page_size=page_size,
+                           pages=2)
+    per_page = max(1, two - one)
+    fixed = one - per_page
+    n = (budget_bytes - fixed) // per_page
+    return max(0, int(n))
+
+
+def paged_dims_in_budget(cfg: ModelConfig, max_len: int, budget_bytes: int,
+                         tp: int = 1, *, page_size: int,
+                         avg_tokens: int) -> tuple[int, int]:
+    """(slots, pages) for a paged pool under ``budget_bytes``: the budget
+    buys PAGES; the slot count is sized for ``avg_tokens``-token requests
+    (concurrency = usable page tokens / avg request tokens) — the
+    oversubscription that lets a paged pool serve more concurrent requests
+    than ``max_len`` strips at the same byte budget.  Slot metadata
+    (page-table rows, hybrid ssm state) also costs bytes, so the pair is
+    solved by a short fixed-point iteration."""
+    slots = 1
+    pages = 0
+    for _ in range(4):
+        pages = max_pages_in_budget(cfg, slots, max_len, budget_bytes, tp,
+                                    page_size=page_size)
+        if pages < 2:
+            break
+        new_slots = max(1, ((pages - 1) * page_size) // max(1, avg_tokens))
+        if new_slots == slots:
+            break
+        slots = new_slots
+    else:
+        # iteration cap hit with slots just grown: re-fit pages to the
+        # final slot count so the pool stays within budget
+        pages = max_pages_in_budget(cfg, slots, max_len, budget_bytes, tp,
+                                    page_size=page_size)
+    return slots, pages

@@ -10,16 +10,35 @@ until everyone is done.
 
 This module schedules instead:
 
-  * a fixed pool of ``slots`` cache slots (``kv_cache.init_slot_pool``),
-  * requests join by *prefilling into a free slot* (admission),
+  * a fixed pool of ``slots`` cache slots — PAGED by default
+    (``kv_cache.init_paged_pool``): a shared arena of fixed-size pages plus
+    a per-slot page table, so capacity is bounded by total tokens in
+    flight, not ``slots × max_len``.  Families without a position-addressed
+    cache (ssm) fall back to the slot-major strip pool
+    (``kv_cache.init_slot_pool``),
+  * requests join by *prefilling into a free slot* (admission) — paged
+    admission also requires ``ceil(prompt / page_size)`` free arena pages,
+  * prompt lengths are BUCKETED to a small set of padded sizes (multiples
+    of the page size, doubling up to ``max_len``) so admission compiles
+    once per bucket instead of once per distinct prompt length; logits are
+    read at the true last token, and the pad tail is invisible behind the
+    pool's length mask.  Families whose prefill carries recurrent state
+    (ssm, hybrid) prefill unpadded — padding would pollute the state,
   * one jitted ragged decode step (``engine.decode_step_ragged``) advances
     every occupied slot per iteration, whatever its age — no per-sequence
     recompilation, mixed positions in one call,
+  * decode-time page growth is allocated just before each burst; on
+    OOM-pages the latest-admitted request is PREEMPTED — its pages are
+    recycled and it is requeued with prompt = original prompt + tokens so
+    far (recompute on readmission, the classic paged-serving eviction) —
+    and a lone request that cannot grow retires with reason
+    ``"oom_pages"``,
   * slots are freed on EOS / max-tokens / cache-full and immediately
     backfilled from the queue between decode steps.
 
-Host state (which request owns which slot, emitted tokens) stays in Python;
-device state (the slot-major cache + lengths) stays a jit-threaded pytree.
+Host state (which request owns which slot/pages, emitted tokens) stays in
+Python; device state (cache arenas + page tables + lengths) stays a
+jit-threaded pytree.
 """
 
 from __future__ import annotations
@@ -33,6 +52,19 @@ import numpy as np
 
 from repro.serving import engine, kv_cache
 
+# families whose prefill is position-local: a pad tail past the true
+# prompt cannot influence earlier positions, so it stays invisible behind
+# the length mask and prompts can be bucketed.  hybrid carries ssm state
+# through prefill (padding would pollute the state); moe's capacity
+# dispatch sizes expert capacity from the PADDED length and drops tokens
+# against it, so pad tokens can displace real ones — both families must
+# see exact-length prompts.
+_BUCKETABLE_FAMILIES = ("dense", "vlm")
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-int(x) // int(mult)) * int(mult)
+
 
 @dataclass
 class Request:
@@ -41,6 +73,7 @@ class Request:
     prompt: tuple[int, ...]            # prompt token ids
     max_new_tokens: int = 32
     arrival_s: float = 0.0             # offset from ``run()`` start
+    resumed: bool = False              # requeued after a page preemption
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -58,47 +91,88 @@ class Completion:
     tokens: list[int] = field(default_factory=list)
     admitted_s: float = 0.0
     finished_s: float = 0.0
-    reason: str = ""                   # "max_tokens" | "eos" | "cache_full"
+    reason: str = ""         # "max_tokens" | "eos" | "cache_full" | "oom_pages"
+    seq: int = 0             # admission order (preemption picks the latest)
 
 
 class ContinuousBatchingEngine:
     """Slot-based continuous batching for one model + parameter set.
 
-    ``slots`` may be given directly, or derived from ``memory_budget_bytes``
-    (``kv_cache.max_slots_in_budget`` — the slot pool is the dominant
-    decode-time allocation, so budgeting slots is budgeting cache bytes).
+    ``paged`` defaults to "auto": the paged pool wherever the family's
+    cache is position-addressed, the strip pool otherwise (ssm).  ``slots``
+    may be given directly, or derived from ``memory_budget_bytes`` — for a
+    strip pool via ``kv_cache.max_slots_in_budget``; for a paged pool the
+    budget buys *pages*, and the slot count is sized so concurrency matches
+    ``avg_tokens_hint`` tokens per request (default ``max_len // 2``) —
+    the oversubscription that lets a paged pool serve more concurrent
+    requests than strips at the same byte budget.
     """
 
     def __init__(self, model, params, *, slots: int | None = None,
                  max_len: int = 256, temperature: float = 1.0,
                  eos_token: int | None = None, seed: int = 0,
                  memory_budget_bytes: int | None = None,
-                 moe_impl: str = "dispatch"):
+                 moe_impl: str = "dispatch", paged: bool | str = "auto",
+                 page_size: int | None = None, pages: int | None = None,
+                 prefill_buckets="auto", avg_tokens_hint: int | None = None):
         cfg = model.cfg
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching does not cover the encoder-decoder "
                 "family (fixed dec_len decode); use engine.generate")
+        if paged == "auto":
+            paged = kv_cache.supports_paging(cfg)
+        elif paged and not kv_cache.supports_paging(cfg):
+            raise ValueError(f"family {cfg.family!r} has no pageable cache")
+        self.paged = bool(paged)
+        self.max_len = int(max_len)
+        self.page_size = (kv_cache.resolve_page_size(cfg, max_len, page_size)
+                          if self.paged else None)
+
         if slots is None:
             if memory_budget_bytes is None:
                 raise ValueError("pass slots= or memory_budget_bytes=")
-            slots = kv_cache.max_slots_in_budget(
-                cfg, max_len, memory_budget_bytes, model.tp)
-            if slots < 1:
-                raise ValueError(
-                    f"memory budget {memory_budget_bytes} fits 0 slots of "
-                    f"max_len {max_len}")
+            if self.paged:
+                slots, pages = kv_cache.paged_dims_in_budget(
+                    cfg, max_len, memory_budget_bytes, model.tp,
+                    page_size=self.page_size,
+                    avg_tokens=avg_tokens_hint or max(1, max_len // 2))
+                if slots < 1 or pages < 2:
+                    raise ValueError(
+                        f"memory budget {memory_budget_bytes} fits no usable "
+                        f"paged pool at max_len {max_len}")
+            else:
+                slots = kv_cache.max_slots_in_budget(
+                    cfg, max_len, memory_budget_bytes, model.tp)
+                if slots < 1:
+                    raise ValueError(
+                        f"memory budget {memory_budget_bytes} fits 0 slots "
+                        f"of max_len {max_len}")
         self.model = model
         self.cfg = cfg
         self.params = params
         self.n_slots = int(slots)
-        self.max_len = int(max_len)
         self.temperature = temperature
         self.eos_token = eos_token
         self.key = jax.random.PRNGKey(seed)
 
-        self.pool = kv_cache.init_slot_pool(cfg, self.n_slots, self.max_len,
-                                            model.tp)
+        if self.paged:
+            self.pages_per_slot = kv_cache.pages_per_slot(self.max_len,
+                                                          self.page_size)
+            if pages is None:
+                pages = 1 + self.n_slots * self.pages_per_slot
+            self.pool = kv_cache.init_paged_pool(
+                cfg, self.n_slots, self.max_len, model.tp,
+                page_size=self.page_size, pages=int(pages))
+            self.allocator = kv_cache.PageAllocator(int(pages))
+            self.slot_pages: list[list[int]] = [[] for _ in
+                                                range(self.n_slots)]
+        else:
+            self.pool = kv_cache.init_slot_pool(cfg, self.n_slots,
+                                                self.max_len, model.tp)
+
+        self.buckets = self._resolve_buckets(prefill_buckets)
+        self._moe_impl = moe_impl
 
         # Sampling is fused INTO the jitted step/prefill: the sampler is a
         # softmax site (resolves through the config's SoftmaxPolicy) and
@@ -113,31 +187,98 @@ class ContinuousBatchingEngine:
                                       vocab=cfg.vocab)
             return tok.astype(jnp.int32), new_pool, key
 
-        def _fused_prefill(params, prompt, key):
-            logits, cache = engine.prefill(
-                params, prompt, cfg=cfg, tp=model.tp, max_len=self.max_len,
-                moe_impl=moe_impl)
-            tok = engine.sample_token(logits, key, temperature, cfg=cfg,
-                                      vocab=cfg.vocab)
-            return tok.astype(jnp.int32), cache
-
         self._step = jax.jit(_fused_decode)
-        self._prefill = jax.jit(_fused_prefill)
-        self._adopt = jax.jit(kv_cache.adopt_slot)
-        self._free = jax.jit(kv_cache.free_slot)
+        # prefill jits are cached per cache-allocation length (one compile
+        # per prompt bucket); see _prefill_fn.
+        self._prefill_fns: dict[int, object] = {}
+        self._prefill_shapes: set[tuple] = set()
+        if self.paged:
+            self._adopt = jax.jit(kv_cache.adopt_slot_paged)
+            self._free = jax.jit(kv_cache.free_slot_paged)
+            self._set_row = jax.jit(kv_cache.set_page_row)
+        else:
+            self._adopt = jax.jit(kv_cache.adopt_slot)
+            self._free = jax.jit(kv_cache.free_slot)
 
         # host-side authoritative state
         self.slot_owner: list[Completion | None] = [None] * self.n_slots
+        self.slot_req: list[Request | None] = [None] * self.n_slots
         self.next_tok = np.zeros((self.n_slots,), np.int64)
         self.pending: list[Request] = []
         self.completions: list[Completion] = []
+        self._carried: dict[int, tuple[int, list[int]]] = {}
+        self._admit_seq = 0
         # phase-separated throughput accounting (the satellite ask: a single
         # aggregate hides which phase the bandwidth argument is about)
         self.stats = dict(prefill_tokens=0, prefill_s=0.0, decode_tokens=0,
-                          decode_s=0.0, steps=0, admitted=0)
+                          decode_s=0.0, steps=0, admitted=0, preempted=0,
+                          peak_pages=0)
+
+    # -- prefill buckets -----------------------------------------------------
+    def _resolve_buckets(self, prefill_buckets):
+        """Padded prompt lengths admission compiles for.  None = exact
+        lengths (recurrent-state families, or an explicit opt-out)."""
+        if prefill_buckets is None or prefill_buckets is False:
+            return None
+        if prefill_buckets == "auto":
+            if self.cfg.family not in _BUCKETABLE_FAMILIES:
+                return None
+            base = self.page_size or kv_cache.resolve_page_size(
+                self.cfg, self.max_len)
+            bs, b = [], base
+            while b < self.max_len:
+                bs.append(b)
+                b *= 2
+            bs.append(self.max_len)
+            return tuple(sorted(set(bs)))
+        bs = tuple(sorted(int(b) for b in prefill_buckets))
+        if not bs or bs[-1] < self.max_len:
+            raise ValueError("prefill_buckets must cover max_len "
+                             f"(got {bs}, max_len {self.max_len})")
+        return bs
+
+    def _bucket_for(self, plen: int) -> int:
+        if self.buckets is None:
+            return plen
+        return next(b for b in self.buckets if b >= plen)
+
+    def _prefill_fn(self, alloc_len: int):
+        """Jitted fused prefill+sample for one cache-allocation length
+        (strip pools always use ``max_len``; paged pools allocate the
+        bucket rounded up to whole pages)."""
+        fn = self._prefill_fns.get(alloc_len)
+        if fn is None:
+            cfg, tp, moe_impl = self.cfg, self.model.tp, self._moe_impl
+            temperature = self.temperature
+
+            def _fused_prefill(params, prompt, key, last_pos):
+                logits, cache = engine.prefill(
+                    params, prompt, cfg=cfg, tp=tp, max_len=alloc_len,
+                    moe_impl=moe_impl, last_pos=last_pos)
+                tok = engine.sample_token(logits, key, temperature, cfg=cfg,
+                                          vocab=cfg.vocab)
+                return tok.astype(jnp.int32), cache
+
+            fn = jax.jit(_fused_prefill)
+            self._prefill_fns[alloc_len] = fn
+        return fn
 
     # -- request intake ------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue ``req``; requests that can NEVER be served are rejected
+        here, before they can wedge the queue (head-of-line admission would
+        otherwise retry them forever)."""
+        plen = len(req.prompt)
+        if plen + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + "
+                f"{req.max_new_tokens} new tokens exceeds max_len "
+                f"{self.max_len}")
+        if self.paged and self._pages_for(plen) > self.allocator.usable_pages:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} needs "
+                f"{self._pages_for(plen)} pages; the pool has "
+                f"{self.allocator.usable_pages} (page_size {self.page_size})")
         self.pending.append(req)
         self.pending.sort(key=lambda r: r.arrival_s)
 
@@ -147,38 +288,108 @@ class ContinuousBatchingEngine:
     def active_slots(self) -> list[int]:
         return [i for i, o in enumerate(self.slot_owner) if o is not None]
 
+    # -- paged bookkeeping ---------------------------------------------------
+    def _pages_for(self, tokens: int) -> int:
+        return -(-int(tokens) // self.page_size)
+
+    def _page_row(self, slot: int) -> jnp.ndarray:
+        row = np.full((self.pages_per_slot,), kv_cache.TRASH_PAGE, np.int32)
+        ids = self.slot_pages[slot]
+        row[:len(ids)] = ids
+        return jnp.asarray(row)
+
+    def _note_peak(self) -> None:
+        used = self.allocator.usable_pages - self.allocator.free_pages
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], used)
+
+    def _release_slot(self, slot: int) -> None:
+        """Free device slot + (paged) its arena pages."""
+        self.slot_owner[slot] = None
+        self.slot_req[slot] = None
+        if self.paged:
+            self.allocator.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+        self.pool = self._free(self.pool, jnp.int32(slot))
+
     # -- admission: prefill into a free slot ---------------------------------
-    def _admit(self, req: Request, slot: int, now: float) -> None:
-        if len(req.prompt) + req.max_new_tokens > self.max_len:
+    def _admit(self, req: Request, slot: int, now: float) -> bool:
+        """Prefill ``req`` into ``slot``.  Returns False (nothing consumed)
+        when the page pool cannot back the prompt right now."""
+        plen = len(req.prompt)
+        if plen + req.max_new_tokens > self.max_len:
             raise ValueError(
-                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"request {req.rid}: prompt {plen} + "
                 f"{req.max_new_tokens} new tokens exceeds max_len "
                 f"{self.max_len}")
+        page_ids = None
+        if self.paged:
+            need = self._pages_for(plen)
+            if need > self.allocator.usable_pages:
+                if req.resumed:
+                    # a preempted request regrew past pool capacity: retire
+                    # it with what it generated rather than crashing the run
+                    self._finalize_oom(req, now)
+                    return True
+                raise ValueError(
+                    f"request {req.rid}: prompt {plen} needs {need} pages; "
+                    f"the pool has {self.allocator.usable_pages} "
+                    f"(page_size {self.page_size})")
+            page_ids = self.allocator.alloc(need)
+            if page_ids is None:
+                return False
         t0 = time.perf_counter()
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        bucket = self._bucket_for(plen)
+        padded = np.zeros((1, bucket), np.int64)
+        padded[0, :plen] = req.prompt
+        prompt = jnp.asarray(padded, jnp.int32)
+        alloc_len = (_round_up(bucket, self.page_size) if self.paged
+                     else self.max_len)
         self.key, sub = jax.random.split(self.key)
-        tok, cache = self._prefill(self.params, prompt, sub)
-        self.pool = self._adopt(self.pool, cache, jnp.int32(slot),
-                                jnp.int32(len(req.prompt)))
+        tok, cache = self._prefill_fn(alloc_len)(
+            self.params, prompt, sub, jnp.int32(plen - 1))
+        self._prefill_shapes.add((bucket, alloc_len))
+        if self.paged:
+            self.slot_pages[slot] = page_ids
+            self.pool = self._adopt(self.pool, cache, jnp.int32(slot),
+                                    jnp.int32(plen), self._page_row(slot))
+            self._note_peak()
+        else:
+            self.pool = self._adopt(self.pool, cache, jnp.int32(slot),
+                                    jnp.int32(plen))
         tok = int(jax.block_until_ready(tok)[0])
         self.stats["prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_tokens"] += len(req.prompt)
+        self.stats["prefill_tokens"] += plen
         self.stats["admitted"] += 1
+        self._admit_seq += 1
 
-        comp = Completion(rid=req.rid, slot=slot,
-                          prompt_len=len(req.prompt),
-                          max_new_tokens=req.max_new_tokens, admitted_s=now)
+        comp = Completion(rid=req.rid, slot=slot, prompt_len=plen,
+                          max_new_tokens=req.max_new_tokens, admitted_s=now,
+                          seq=self._admit_seq)
         self.slot_owner[slot] = comp
+        self.slot_req[slot] = req
         comp.tokens.append(tok)
         self.next_tok[slot] = tok
         self._maybe_retire(slot, now)        # max_new_tokens == 1 edge
+        return True
 
     def _admit_arrived(self, now: float) -> None:
         free = self.free_slots()
         while free and self.pending and self.pending[0].arrival_s <= now:
-            self._admit(self.pending.pop(0), free.pop(0), now)
+            if not self._admit(self.pending[0], free[0], now):
+                break                        # no pages: wait for retirements
+            self.pending.pop(0)
+            free = self.free_slots()
 
     # -- retirement ----------------------------------------------------------
+    def _merge_carried(self, comp: Completion) -> None:
+        """Fold tokens generated before a preemption back into the final
+        completion (its prompt absorbed them while requeued)."""
+        if comp.rid in self._carried:
+            orig_plen, prior = self._carried.pop(comp.rid)
+            comp.tokens = prior + comp.tokens
+            comp.max_new_tokens += len(prior)
+            comp.prompt_len = orig_plen
+
     def _maybe_retire(self, slot: int, now: float) -> None:
         comp = self.slot_owner[slot]
         reason = None
@@ -191,9 +402,86 @@ class ContinuousBatchingEngine:
         if reason is not None:
             comp.finished_s = now
             comp.reason = reason
+            self._merge_carried(comp)
             self.completions.append(comp)
-            self.slot_owner[slot] = None
-            self.pool = self._free(self.pool, jnp.int32(slot))
+            self._release_slot(slot)
+
+    # -- paged preemption ----------------------------------------------------
+    def _finalize_oom(self, req: Request, now: float) -> None:
+        orig_plen, prior = self._carried.pop(req.rid,
+                                             (len(req.prompt), []))
+        self.completions.append(Completion(
+            rid=req.rid, slot=-1, prompt_len=orig_plen,
+            max_new_tokens=len(prior) + req.max_new_tokens, tokens=prior,
+            finished_s=now, reason="oom_pages"))
+
+    def _preempt(self, slot: int, now: float) -> None:
+        """Evict ``slot`` to reclaim its pages: requeue the request with
+        prompt = original prompt + tokens so far (recompute on
+        readmission).  Pages AND the slot free immediately."""
+        comp = self.slot_owner[slot]
+        req = self.slot_req[slot]
+        orig_plen, prior = self._carried.get(comp.rid,
+                                             (comp.prompt_len, []))
+        self._carried[comp.rid] = (orig_plen, prior + comp.tokens)
+        remaining = comp.max_new_tokens - len(comp.tokens)
+        self.pending.insert(0, Request(
+            rid=comp.rid, prompt=tuple(req.prompt) + tuple(comp.tokens),
+            max_new_tokens=max(1, remaining), arrival_s=0.0, resumed=True))
+        self._release_slot(slot)
+        self.stats["preempted"] += 1
+
+    def _pick_victim(self) -> int:
+        """Latest-admitted active slot (LIFO preemption): the youngest
+        request has the least sunk prefill+decode work to recompute.
+        Callers guarantee at least one active slot."""
+        return max((self.slot_owner[s].seq, s)
+                   for s in self.active_slots())[1]
+
+    def _ensure_pages(self, runahead: int, now: float) -> int:
+        """Make every active slot's next ``h <= runahead`` write positions
+        page-backed before the decode burst.  Shrinks the horizon before
+        touching anyone; preempts the latest-admitted slot when even one
+        step cannot be backed; a lone slot that cannot grow retires as
+        ``"oom_pages"``.  Returns the achieved horizon (0 = nothing left
+        active)."""
+        while True:
+            active = self.active_slots()
+            if not active:
+                return 0
+
+            def extra(slot: int, h: int) -> int:
+                comp = self.slot_owner[slot]
+                dev_len = comp.prompt_len + len(comp.tokens) - 1
+                target = min(dev_len + h, self.max_len)
+                return max(0,
+                           self._pages_for(target) -
+                           len(self.slot_pages[slot]))
+
+            h = max(1, runahead)
+            while h > 1 and (sum(extra(s, h) for s in active)
+                             > self.allocator.free_pages):
+                h -= 1
+            if (sum(extra(s, h) for s in active)
+                    <= self.allocator.free_pages):
+                for s in active:
+                    n = extra(s, h)
+                    if n:
+                        self.slot_pages[s].extend(self.allocator.alloc(n))
+                        self.pool = self._set_row(self.pool, jnp.int32(s),
+                                                  self._page_row(s))
+                self._note_peak()
+                return h
+            if len(active) == 1:
+                # nothing else to evict: retire with what it produced
+                comp = self.slot_owner[active[0]]
+                comp.finished_s = now
+                comp.reason = "oom_pages"
+                self._merge_carried(comp)
+                self.completions.append(comp)
+                self._release_slot(active[0])
+                return 0
+            self._preempt(self._pick_victim(), now)
 
     # -- one scheduler iteration --------------------------------------------
     def _runahead(self, comps: list[Completion]) -> int:
@@ -221,9 +509,14 @@ class ContinuousBatchingEngine:
         active = self.active_slots()
         if not active:
             return False
+        runahead = self._runahead([self.slot_owner[s] for s in active])
+        if self.paged:
+            runahead = self._ensure_pages(runahead, now)
+            active = self.active_slots()     # preemption may have shrunk it
+            if not active:
+                return bool(self.pending)
         mask = np.zeros((self.n_slots,), bool)
         mask[active] = True
-        runahead = self._runahead([self.slot_owner[s] for s in active])
 
         mask_dev = jnp.asarray(mask)
         toks_dev = jnp.asarray(self.next_tok, jnp.int32)
@@ -288,10 +581,11 @@ class ContinuousBatchingEngine:
 
     # -- reporting ----------------------------------------------------------
     def throughput(self) -> dict:
-        """Phase-separated throughput: prefill vs decode tok/s (+ totals)."""
+        """Phase-separated throughput: prefill vs decode tok/s (+ totals,
+        + page-pool occupancy for paged pools)."""
         st = self.stats
         wall = st["prefill_s"] + st["decode_s"]
-        return dict(
+        out = dict(
             prefill_tok_s=(st["prefill_tokens"] / st["prefill_s"]
                            if st["prefill_s"] else 0.0),
             decode_tok_s=(st["decode_tokens"] / st["decode_s"]
@@ -299,4 +593,12 @@ class ContinuousBatchingEngine:
             requests_s=(len(self.completions) / wall if wall else 0.0),
             slots=self.n_slots, steps=st["steps"], admitted=st["admitted"],
             prefill_tokens=st["prefill_tokens"],
-            decode_tokens=st["decode_tokens"], wall_s=wall)
+            decode_tokens=st["decode_tokens"], wall_s=wall,
+            paged=self.paged,
+            prefill_compiles=len(self._prefill_shapes))
+        if self.paged:
+            out.update(page_size=self.page_size,
+                       pages=self.allocator.usable_pages,
+                       peak_pages=st["peak_pages"],
+                       preempted=st["preempted"])
+        return out

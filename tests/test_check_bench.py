@@ -1,0 +1,118 @@
+"""Unit tests for the CI benchmark-regression gate (scripts/check_bench.py):
+merge estimators, per-metric spread tolerance, calibration, ratio
+direction, and missing-metric failure — all on synthetic run dicts, no
+benchmarks executed."""
+
+import importlib.util
+import pathlib
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench",
+    pathlib.Path(__file__).parent.parent / "scripts" / "check_bench.py")
+cb = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cb)
+
+
+def _run(**benches):
+    return {"mode": "smoke", "backend": "cpu", "benchmarks": benches}
+
+
+class TestMerge:
+    def test_best_takes_min_time_max_ratio(self):
+        merged = cb.merge_best([
+            _run(b={"b/t": 200.0, "b/x_vs_y": 2.0}),
+            _run(b={"b/t": 150.0, "b/x_vs_y": 3.0}),
+        ])
+        assert merged["benchmarks"]["b"] == {"b/t": 150.0, "b/x_vs_y": 3.0}
+
+    def test_median_records_spreads(self):
+        merged = cb.merge_median([
+            _run(b={"b/t": 100.0, "b/s": 100.0}),
+            _run(b={"b/t": 300.0, "b/s": 105.0}),
+            _run(b={"b/t": 200.0, "b/s": 102.0}),
+        ])
+        assert merged["benchmarks"]["b"]["b/t"] == 200.0
+        assert merged["spreads"]["b/b/t"] == 3.0
+        assert merged["spreads"]["b/b/s"] == 1.05
+
+    def test_canonicalization_merges_tuned_names(self):
+        merged = cb.merge_median([
+            _run(b={"b/tuned(8, 128)": 100.0}),
+            _run(b={"b/tuned(8, 256)": 120.0}),
+        ])
+        assert merged["benchmarks"]["b"] == {"b/tuned": 110.0}
+
+
+class TestCompare:
+    def test_regression_fails_and_clean_passes(self):
+        base = cb.merge_median([_run(b={"b/t": 200.0})])
+        ok, _, _ = cb.compare(base, _run(b={"b/t": 220.0}),
+                              threshold=0.30, min_us=100.0)
+        assert ok == []
+        bad, _, _ = cb.compare(base, _run(b={"b/t": 300.0}),
+                               threshold=0.30, min_us=100.0)
+        assert len(bad) == 1 and "slowed" in bad[0]
+
+    def test_spread_widens_tolerance_but_not_unboundedly(self):
+        # spread 2x: a 2.1x slowdown passes (inside noise + threshold),
+        # a 10x slowdown still fails
+        base = cb.merge_median([_run(b={"b/t": 100.0, "b/other": 500.0}),
+                                _run(b={"b/t": 200.0, "b/other": 500.0})])
+        assert base["spreads"]["b/b/t"] == 2.0
+        ok, _, _ = cb.compare(
+            base, _run(b={"b/t": 310.0, "b/other": 500.0}),
+            threshold=0.30, min_us=100.0)          # 150*2.07 < 150*(1+1.3)
+        assert ok == []
+        bad, _, _ = cb.compare(
+            base, _run(b={"b/t": 1500.0, "b/other": 500.0}),
+            threshold=0.30, min_us=100.0)
+        assert len(bad) == 1
+
+    def test_spread_tolerance_is_capped(self):
+        # a wildly bimodal metric (spread 20x) must stay gateable: the
+        # widening caps at +100%, so a 3x regression still fails
+        base = cb.merge_median([_run(b={"b/t": 100.0}),
+                                _run(b={"b/t": 2000.0})])
+        assert base["spreads"]["b/b/t"] == 20.0
+        bad, _, _ = cb.compare(base, _run(b={"b/t": 3300.0}),
+                               threshold=0.30, min_us=100.0)
+        assert len(bad) == 1                       # 3300 > 1050*(1+1.3)
+
+    def test_baseline_drops_bookkeeping_rows(self):
+        base = cb.merge_median([
+            _run(a={"a/t": 200.0, "a/cache=/tmp/xyz/c.json": 1234,
+                    "a/note": "persisted"})])
+        assert base["benchmarks"]["a"] == {"a/t": 200.0}
+
+    def test_calibration_cancels_uniform_slowdown(self):
+        base = cb.merge_median(
+            [_run(b={f"b/t{i}": 200.0 for i in range(5)})])
+        # everything uniformly 2x slower: machine shift, not a regression
+        ok, _, cal = cb.compare(
+            base, _run(b={f"b/t{i}": 400.0 for i in range(5)}),
+            threshold=0.30, min_us=100.0)
+        assert ok == [] and cal == 2.0
+        # one metric 4x while the rest are 2x: stands out, fails
+        cur = {f"b/t{i}": 400.0 for i in range(5)}
+        cur["b/t0"] = 800.0
+        bad, _, _ = cb.compare(base, _run(b=cur),
+                               threshold=0.30, min_us=100.0)
+        assert len(bad) == 1 and "b/t0" in bad[0]
+
+    def test_ratio_direction_and_floor(self):
+        base = cb.merge_median([_run(b={"b/x_vs_y": 4.0, "b/tiny": 50.0})])
+        bad, _, _ = cb.compare(base, _run(b={"b/x_vs_y": 1.0,
+                                             "b/tiny": 50.0}),
+                               threshold=0.30, min_us=100.0)
+        assert len(bad) == 1 and "ratio fell" in bad[0]
+        # rising ratio + sub-floor timing noise: no failures
+        ok, notes, _ = cb.compare(base, _run(b={"b/x_vs_y": 9.0,
+                                                "b/tiny": 90.0}),
+                                  threshold=0.30, min_us=100.0)
+        assert ok == [] and any("noise floor" in n for n in notes)
+
+    def test_missing_metric_and_benchmark_fail(self):
+        base = cb.merge_median([_run(a={"a/t": 200.0}, b={"b/t": 200.0})])
+        bad, _, _ = cb.compare(base, _run(a={}), threshold=0.30,
+                               min_us=100.0)
+        assert sorted("missing" in f for f in bad) == [True, True]

@@ -287,8 +287,28 @@ class TestSlotBudget:
         params = m.init(KEY)
         budget = kv_cache.slot_pool_bytes(m.cfg, 3, 32)
         eng = ContinuousBatchingEngine(m, params, max_len=32,
-                                       memory_budget_bytes=budget)
+                                       memory_budget_bytes=budget,
+                                       paged=False)
         assert eng.n_slots == 3
         with pytest.raises(ValueError, match="fits 0 slots"):
             ContinuousBatchingEngine(m, params, max_len=32,
-                                     memory_budget_bytes=16)
+                                     memory_budget_bytes=16, paged=False)
+
+    def test_paged_engine_from_memory_budget_oversubscribes(self):
+        """Same byte budget, paged pool: the budget buys pages, and with
+        half-max_len requests the pool admits MORE concurrent slots than
+        the strip pool fits (the tentpole memory claim)."""
+        m = build_model("qwen2.5-14b", reduced=True)
+        params = m.init(KEY)
+        budget = kv_cache.slot_pool_bytes(m.cfg, 4, 128)
+        eng = ContinuousBatchingEngine(m, params, max_len=128,
+                                       memory_budget_bytes=budget,
+                                       page_size=16, avg_tokens_hint=32)
+        assert eng.paged
+        assert eng.n_slots >= 2 * 4
+        assert (kv_cache.paged_pool_bytes(
+            m.cfg, eng.n_slots, 128, page_size=16,
+            pages=eng.allocator.n_pages) <= budget)
+        with pytest.raises(ValueError, match="fits no usable paged pool"):
+            ContinuousBatchingEngine(m, params, max_len=128,
+                                     memory_budget_bytes=16, page_size=16)
