@@ -1,0 +1,126 @@
+"""Beyond-paper: decode-attention microbench — Pallas kernels vs the jnp
+(m, n) reference forms, contiguous strip vs paged cache.
+
+The serving decode hot path is ``ops.decode_attention`` /
+``ops.decode_attention_paged``: one query per slot against that slot's
+valid cache prefix.  Since ISSUE 5 each op has two implementations behind
+the same registry resolution — the Pallas kernels
+(``kernels/decode_attention.py``: length mask and page-table gather fused
+into the VMEM KV sweep) and the jnp chunked forms (XLA-staged masking and
+``jnp.take`` gathers).  This benchmark times all four cells at serving
+shapes, plus the strip-vs-paged gather overhead on the jnp path:
+
+  * ``jnp_strip`` / ``pallas_strip`` — contiguous slot-major cache,
+  * ``jnp_paged`` / ``pallas_paged`` — page arena through a shuffled
+    page table (the gather is part of what is timed),
+  * ``paged_gather_overhead`` — jnp paged / jnp strip time ratio.  Lower
+    is better and ~1 means the gather is free, so the name deliberately
+    avoids the gate's higher-is-better ``_vs_`` convention
+    (scripts/check_bench.py) — as a sub-``--min-us`` "time" it can only
+    warn, never flap CI.
+
+On this CPU container the Pallas rows run in interpret mode: they verify
+the kernels execute end-to-end at benchmark shapes, but their timings are
+an interpreter artifact, not kernel performance (see benchmarks/common.py
+header) — on a TPU backend the same rows time the real kernels.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def _inputs(slots, t, heads, d, seed=0):
+    import jax
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (slots, heads, 1, d))
+    k = jax.random.normal(ks[1], (slots, heads, t, d))
+    v = jax.random.normal(ks[2], (slots, heads, t, d))
+    # mixed-age pool: the masking work is part of what is timed
+    lengths = jax.random.randint(jax.random.PRNGKey(seed + 1), (slots,),
+                                 1, t + 1)
+    return q, k, v, lengths
+
+
+def _paged_inputs(k, v, page_size, seed=0):
+    import jax.numpy as jnp
+
+    s, h, t, d = k.shape
+    pmax = -(-t // page_size)
+    pages = 1 + s * pmax
+    rng = np.random.default_rng(seed)
+    pt = rng.permutation(np.arange(1, pages))[:s * pmax].reshape(s, pmax)
+    kp = np.zeros((pages, page_size, h, d), np.float32)
+    vp = np.zeros((pages, page_size, h, d), np.float32)
+    kn, vn = np.asarray(k), np.asarray(v)
+    if t % page_size:                    # zero-pad the tail page (t is not
+        pad = pmax * page_size - t       # a page multiple); lengths <= t
+        kn = np.pad(kn, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vn = np.pad(vn, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    for i in range(s):
+        for p in range(pmax):
+            kp[pt[i, p]] = kn[i, :, p * page_size:(p + 1) *
+                              page_size].transpose(1, 0, 2)
+            vp[pt[i, p]] = vn[i, :, p * page_size:(p + 1) *
+                              page_size].transpose(1, 0, 2)
+    return (jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(pt, dtype=jnp.int32))
+
+
+def run(shapes=((8, 1024),), heads: int = 2, head_dim: int = 64,
+        page_size: int = 128):
+    import jax
+
+    from repro.kernels import ops
+
+    rows = []
+    for slots, t in shapes:
+        ps = min(page_size, t)
+        q, k, v, lengths = _inputs(slots, t, heads, head_dim)
+        kp, vp, pt = _paged_inputs(k, v, ps)
+        base = f"decode/slots={slots}/T={t}"
+
+        def strip(uk):
+            return lambda: jax.block_until_ready(ops.decode_attention(
+                q, k, v, lengths, use_kernel=uk))
+
+        def paged(uk):
+            return lambda: jax.block_until_ready(ops.decode_attention_paged(
+                q, kp, vp, pt, lengths, use_kernel=uk))
+
+        t_js = time_fn(strip(False))
+        t_ps = time_fn(strip(True))
+        t_jp = time_fn(paged(False))
+        t_pp = time_fn(paged(True))
+        backend = jax.default_backend()
+        note = "interpret" if backend == "cpu" else backend
+        rows.append((f"{base}/jnp_strip", round(t_js * 1e6, 2), "xla"))
+        rows.append((f"{base}/pallas_strip", round(t_ps * 1e6, 2), note))
+        rows.append((f"{base}/jnp_paged", round(t_jp * 1e6, 2),
+                     f"page={ps}"))
+        rows.append((f"{base}/pallas_paged", round(t_pp * 1e6, 2), note))
+        rows.append((f"{base}/paged_gather_overhead",
+                     round(t_jp / max(t_js, 1e-12), 3),
+                     "jnp paged/strip (lower=better, ~1 is free)"))
+    return emit(rows)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--slots", type=int, default=8)
+    p.add_argument("--t", type=int, default=1024)
+    p.add_argument("--heads", type=int, default=2)
+    p.add_argument("--head-dim", type=int, default=64)
+    p.add_argument("--page-size", type=int, default=128)
+    args = p.parse_args(argv)
+    run(shapes=((args.slots, args.t),), heads=args.heads,
+        head_dim=args.head_dim, page_size=args.page_size)
+
+
+if __name__ == "__main__":
+    main()

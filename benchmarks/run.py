@@ -8,6 +8,8 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   batched_rows        — Table 1 workload: LM-head vocab-sized rows
   fused_xent          — beyond-paper: fused two-pass CE vs unfused
   attention_stream    — beyond-paper: (m,n)-streamed attention memory/time
+  decode_attention    — beyond-paper: serving decode microbench — Pallas
+                        kernels vs jnp (m,n) forms, strip vs paged cache
   autotune_sweep      — beyond-paper: block-shape autotuner, tuned-vs-default
                         (persists winners to the JSON autotune cache)
   serving_throughput  — beyond-paper: continuous-batching scheduler (paged
@@ -45,9 +47,10 @@ def main() -> None:
     args = p.parse_args()
 
     from benchmarks import (attention_stream, autotune_sweep, batched_rows,
-                            common, fused_xent, library_comparison,
-                            memory_traffic, pass_decomposition,
-                            serving_throughput, softmax_sweep)
+                            common, decode_attention_bench, fused_xent,
+                            library_comparison, memory_traffic,
+                            pass_decomposition, serving_throughput,
+                            softmax_sweep)
 
     # One table, three grids per bench: (full_kwargs, fast_kwargs,
     # smoke_kwargs).  A single dict means a new benchmark can't be added to
@@ -77,6 +80,13 @@ def main() -> None:
             attention_stream.run,
             dict(seqs=(1024, 4096, 8192)), dict(seqs=(1024,)),
             dict(seqs=(128,))),
+        "decode_attention": (
+            decode_attention_bench.run,
+            dict(shapes=((8, 1024), (8, 4096))),
+            dict(shapes=((8, 512),)),
+            # tiny arena; Pallas rows run in interpret mode on CPU, so the
+            # smoke keeps the KV sweep to a couple of tiles
+            dict(shapes=((4, 128),), page_size=32)),
         "autotune_sweep": (
             autotune_sweep.run,
             dict(), dict(shapes=autotune_sweep.FAST_SHAPES),
@@ -88,8 +98,10 @@ def main() -> None:
             serving_throughput.run,
             dict(),
             dict(n_requests=8, slots_list=(4,), max_new=12, max_len=64),
+            # kernel_lane: the Pallas decode kernels serve the same greedy
+            # workload and must emit identical tokens (CI acceptance)
             dict(n_requests=6, slots_list=(4,), prompt_len=8, max_new=8,
-                 max_len=64)),
+                 max_len=64, kernel_lane=True)),
     }
     if args.smoke:
         common.smoke_mode()

@@ -99,9 +99,43 @@ def _measure(eng, reqs, warm_prompt_len):
     return eng.throughput()
 
 
+def _kernel_lane(model, params, base, n_requests, prompt_len, max_new,
+                 vocab, slots, max_len, page_size, pages, seed):
+    """The Pallas-decode serving lane (CI acceptance for the decode
+    kernels): serve the same greedy workload with ``use_kernels`` off and
+    on — the ON engine runs ``decode_attention`` / ``decode_attention_paged``
+    through their Pallas kernels (interpret mode on CPU) inside the jitted
+    ragged step — assert token-for-token parity, and report the kernel
+    path's decode tok/s."""
+    import dataclasses
+
+    from repro.models.model_zoo import Model
+
+    def serve(use_kernels):
+        cfg = dataclasses.replace(model.cfg, use_kernels=use_kernels)
+        eng = Model(cfg, model.tp).serving_engine(
+            params, slots=slots, max_len=max_len, seed=seed, paged=True,
+            page_size=page_size, pages=pages, temperature=0.0)
+        reqs = _requests(n_requests, prompt_len, max_new, None, vocab,
+                         seed=seed)
+        th = _measure(eng, reqs, prompt_len)
+        return th, [tuple(c.tokens) for c in eng.completions]
+
+    _, jtoks = serve(False)
+    kth, ktoks = serve(True)
+    if ktoks != jtoks:
+        raise RuntimeError(
+            "Pallas decode kernels diverged from the jnp reference in the "
+            f"serving smoke: {ktoks} != {jtoks}")
+    return [(f"{base}/pallas_decode", round(1e6 / max(
+        kth["decode_tok_s"], 1e-9), 2),
+        f"{kth['decode_tok_s']:.1f}tok/s (tokens == jnp path)")]
+
+
 def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
         slots_list=(1, 4, 8), prompt_len: int = 16, max_new: int = 24,
-        max_len: int = 64, arrival_rate: float | None = None, seed: int = 0):
+        max_len: int = 64, arrival_rate: float | None = None, seed: int = 0,
+        kernel_lane: bool = False):
     import jax
 
     from repro.models import build_model
@@ -152,6 +186,11 @@ def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
         rows.append((f"{base}/requests", round(th["wall_s"] * 1e6, 2),
                      f"{th['requests_s']:.2f}req/s"))
 
+        if paged_ok and kernel_lane:
+            rows.extend(_kernel_lane(
+                model, params, base, n_requests, prompt_len, max_new, vocab,
+                eff, max_len, page_size, pages, seed))
+
         if paged_ok:
             # strip pool at the SAME byte budget: decode tok/s + how many
             # concurrent requests each design admits for those bytes
@@ -198,7 +237,7 @@ def main(argv=None) -> None:
     args = p.parse_args(argv)
     if args.smoke:
         run(arch=args.arch, n_requests=6, slots_list=(4,), prompt_len=8,
-            max_new=8, max_len=64)
+            max_new=8, max_len=64, kernel_lane=True)
         return
     slots = (tuple(int(s) for s in args.slots.split(","))
              if args.slots else (1, 4, 8))

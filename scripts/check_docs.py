@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs rot gate: intra-repo link integrity + registry-op doc coverage.
+
+Run from anywhere (paths resolve against the repo root); wired into
+``scripts/ci.sh`` and the CI ``fast`` job.  Two checks, both hard
+failures:
+
+  1. **Intra-repo links**: every relative markdown link/image target in
+     ``README.md``, ``ROADMAP.md`` and ``docs/**/*.md`` must exist on
+     disk (``#anchors`` are stripped; ``http(s)://`` / ``mailto:``
+     targets are skipped).  A doc pointing at a renamed file is worse
+     than no doc — it asserts structure that is gone.
+  2. **Registry coverage**: every op in
+     ``repro.kernels.registry.registered_ops()`` must be mentioned (as
+     `` `op` ``) in ``docs/kernels.md`` — registering a kernel without
+     documenting its shapes/tunables fails CI, which is what keeps
+     docs/kernels.md the complete op reference.
+
+Needs ``PYTHONPATH=src`` (or an installed package) for check 2; if the
+import itself fails the script fails loudly rather than skipping — a
+broken import would also mean CI's test jobs are broken.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) and ![alt](target); targets with spaces/titles are cut at
+# the first whitespace ("path "title"" markdown form).
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)[^)]*\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def _doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in _doc_files():
+        for target in _LINK_RE.findall(md.read_text()):
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_registry_coverage() -> list[str]:
+    kernels_md = ROOT / "docs" / "kernels.md"
+    if not kernels_md.exists():
+        return ["docs/kernels.md is missing (the registry op reference)"]
+    text = kernels_md.read_text()
+    from repro.kernels import registry  # needs PYTHONPATH=src
+
+    missing = [op for op in registry.registered_ops()
+               if f"`{op}`" not in text]
+    return [f"docs/kernels.md: registry op `{op}` is undocumented"
+            for op in missing]
+
+
+def main() -> int:
+    errors = check_links() + check_registry_coverage()
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    n_files = len(_doc_files())
+    print(f"docs-check: OK ({n_files} files, links + registry coverage)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

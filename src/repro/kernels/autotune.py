@@ -65,6 +65,16 @@ ATTN_HEAD_DIM = 64       # fixed proxy head dim for attention sweeps
 ATTN_HEADS = 2           # small head count keeps interpret-mode sweeps cheap
 
 
+def decode_kernel_path() -> bool:
+    """Which decode-attention implementation a sweep should time: the
+    Pallas kernels on TPU, the jnp (m, n) fallback elsewhere — each
+    backend tunes the implementation its serving path actually runs.
+    CPU Pallas is interpret mode (a correctness artifact, not a timing)
+    and the decode kernels' scalar-prefetch grid is TPU-only, so GPU
+    backends time the jnp path they serve with too."""
+    return jax.default_backend() == "tpu"
+
+
 def _runner_for(op: str) -> Callable:
     """(x..., br, bc) -> timed callable for one op at fixed blocks.  Block
     overrides are passed explicitly so the sweep bypasses the cache."""
@@ -87,21 +97,30 @@ def _runner_for(op: str) -> Callable:
             return ops.flash_attention(q, k, v, True, None, None, br, bc)
         return run
     if op == "decode_attention":
-        # single-query serving decode: blocks are (slot, kv) chunk lengths;
-        # the wrapper applies the same ceil-div + unroll clamp as serving.
+        # single-query serving decode.  The sweep times the path production
+        # serving runs on this backend (decode_kernel_path): the Pallas
+        # kernel's block_t KV tile on accelerators, the jnp fallback's
+        # (slot, kv) chunk lengths on CPU — interpret-mode timings would
+        # tune the wrong implementation.
+        uk = decode_kernel_path()
+
         def run(args, br, bc):
             q, k, v, lengths = args
             return ops.decode_attention(q, k, v, lengths,
-                                        block_s=br, block_t=bc)
+                                        block_s=br, block_t=bc,
+                                        use_kernel=uk)
         return run
     if op == "decode_attention_paged":
-        # paged serving decode: same axes, but K/V gathered through a page
-        # table from a shared arena; block_t rounds to whole pages inside
-        # the wrapper.
+        # paged serving decode: same axes, K/V gathered through a page
+        # table.  block_t rounds to whole pages — on the Pallas path it
+        # becomes pages_per_tile (capped by MAX_PAGES_PER_TILE).
+        uk = decode_kernel_path()
+
         def run(args, br, bc):
             q, kp, vp, pt, lengths = args
             return ops.decode_attention_paged(q, kp, vp, pt, lengths,
-                                              block_s=br, block_t=bc)
+                                              block_s=br, block_t=bc,
+                                              use_kernel=uk)
         return run
     if op == "chunk_attention":
         # chunked-jnp path: blocks are chunk LENGTHS; counts are the same

@@ -1,0 +1,266 @@
+"""Pallas TPU kernels: single-query decode attention, contiguous and PAGED.
+
+The serving hot path is one query per slot against that slot's whole KV
+cache — the most bandwidth-bound softmax consumer in the repo.  These
+kernels fuse what the jnp (m, n) reference forms in ``ops.py`` do in
+separate XLA stages:
+
+  * the **length/window mask** is applied in-register per KV tile (no
+    masked score matrix ever reaches HBM),
+  * the online softmax runs in the paper's ``(m_sum, n_sum)`` extended
+    representation — accumulator rescales are *exact* powers of two
+    (``exp2_int``), so KV tiles (and therefore pages) may be folded in any
+    order, which is exactly what a non-contiguous paged cache needs,
+  * the paged variant gathers arena pages **tile-by-tile in VMEM** through
+    a scalar-prefetched page table (``pltpu.PrefetchScalarGridSpec``): the
+    table is available before the kernel body runs, so each grid step's
+    page DMAs are issued from table entries instead of materializing a
+    host-visible ``jnp.take`` gather of the whole slot in HBM.
+
+Grid layout (both kernels): ``(slots, Hkv, KV tiles)`` with the KV sweep
+innermost, so the per-(slot, head) accumulators ``(o, m_sum, n_sum)`` live
+in VMEM across the whole sweep (same revisited-output pattern as
+``flash_attention``).  One grid row per slot: the slot axis never tiles —
+the tunable dims are the KV tile length (``block_t``, contiguous) and the
+page count per tile (``pages_per_tile``, paged), swept by
+``repro.kernels.autotune`` through the ``decode_attention`` /
+``decode_attention_paged`` registry ops.
+
+Dispatch: ``ops.decode_attention`` / ``ops.decode_attention_paged`` route
+here when the :class:`SoftmaxPolicy` says ``use_kernels`` (interpret mode
+on CPU) and fall back to the jnp (m, n) chunked forms otherwise — the jnp
+forms remain the reference these kernels are tested against
+(``tests/test_decode_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.numerics import exp2_int, ext_exp
+from repro.kernels.twopass_softmax import _interpret, _tpu_params
+
+NEG_INF = -jnp.inf
+
+# Pages gathered per paged-kernel grid step.  Each page is its own
+# scalar-prefetch block fetch, so the cap bounds the number of BlockSpecs
+# (and DMAs in flight) per step the way MAX_T_CHUNKS bounds the unrolled
+# jnp loops.
+MAX_PAGES_PER_TILE = 8
+
+
+def _grid_spec(num_scalar_prefetch, grid, in_specs, out_specs):
+    from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+        in_specs=in_specs, out_specs=out_specs)
+
+
+def _mn_fold_tile(o_ref, m_ref, n_ref, q, k, v, kpos, length, *,
+                  scale: float, window: int | None, j, last_j: int):
+    """Score one KV tile, mask it, fold it into the running (o, m, n)
+    accumulator refs, and normalize on the sweep's last step.
+
+    ``q``: (G, D) f32; ``k``/``v``: (BT, D)/(BT, Dv) f32; ``kpos``: int32
+    (1, BT) logical cache positions of the tile's columns (2-D for Mosaic's
+    iota rules); ``length``: the slot's
+    valid prefix (its own query sits at ``length - 1``, write-then-attend,
+    so the validity prefix IS the causal mask and SWA is a lower bound off
+    that query position).  A fully-masked tile contributes the exact
+    monoid zero (m=0, n=-inf); a fully-masked SLOT (length 0, a free pool
+    slot) ends with m_sum == 0 and the normalize guard returns exact
+    zeros, never NaN — matching the jnp reference forms bit-for-bit in
+    structure (the accumulation order within a tile differs, so parity is
+    allclose, not bitwise).
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = kpos < length                             # (1, BT), broadcasts
+    if window is not None:
+        mask &= kpos > length - 1 - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m, n = ext_exp(s)                                # (G, BT) pairs
+    n_loc = jnp.max(n, axis=-1, keepdims=True)       # (G, 1)
+    w = m * exp2_int(n - n_loc)                      # numerators / 2^n_loc
+    m_loc = jnp.sum(w, axis=-1, keepdims=True)
+    o_loc = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0, 0] = o_loc
+        m_ref[0, 0] = m_loc
+        n_ref[0, 0] = n_loc
+
+    @pl.when(j > 0)
+    def _fold():
+        n_old = n_ref[0, 0]
+        n_new = jnp.maximum(n_old, n_loc)
+        a_old = exp2_int(n_old - n_new)              # exact 2^k rescales
+        a_loc = exp2_int(n_loc - n_new)
+        o_ref[0, 0] = o_ref[0, 0] * a_old + o_loc * a_loc
+        m_ref[0, 0] = m_ref[0, 0] * a_old + m_loc * a_loc
+        n_ref[0, 0] = n_new
+
+    @pl.when(j == last_j)
+    def _normalize():
+        # max() guard: a free slot (length 0) has m_sum == 0 -> exact zeros
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(m_ref[0, 0], 1e-37)
+
+
+def _contig_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, n_ref, *,
+                   scale: float, window: int | None, block_t: int, nt: int):
+    s_idx = pl.program_id(0)
+    j = pl.program_id(2)
+    kpos = (j * block_t
+            + jax.lax.broadcasted_iota(jnp.int32, (1, block_t), 1))
+    _mn_fold_tile(o_ref, m_ref, n_ref,
+                  q_ref[0, 0].astype(jnp.float32),
+                  k_ref[0, 0].astype(jnp.float32),
+                  v_ref[0, 0].astype(jnp.float32),
+                  kpos, len_ref[s_idx], scale=scale, window=window,
+                  j=j, last_j=nt - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "block_t"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, *, scale: float,
+                            window: int | None = None,
+                            block_t: int = 128) -> jax.Array:
+    """Single-query length-masked attention, Pallas path.
+
+    q: [S, Hkv, G, D]; k: [S, Hkv, T, D]; v: [S, Hkv, T, Dv]; lengths: [S]
+    int32 (scalar-prefetched; 0 marks a free slot, output exact zeros).
+    Returns [S, Hkv, G, Dv] in q.dtype — allclose to the jnp reference
+    ``ops`` falls back to.  The KV axis is padded here to a ``block_t``
+    multiple with zeros: padded positions sit at ``kpos >= T >= lengths``,
+    so the length mask kills them (no -inf padding needed).
+    """
+    s, hkv, g, d = q.shape
+    t = k.shape[2]
+    dv = v.shape[3]
+    bt = min(block_t, pl.cdiv(t, 128) * 128)
+    pt = pl.cdiv(t, bt) * bt
+    if pt != t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pt - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pt - t), (0, 0)))
+    nt = pt // bt
+
+    kernel = functools.partial(_contig_kernel, scale=scale, window=window,
+                               block_t=bt, nt=nt)
+    grid_spec = _grid_spec(
+        1, (s, hkv, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda si, h, j, ln: (si, h, 0, 0)),
+            pl.BlockSpec((1, 1, bt, d), lambda si, h, j, ln: (si, h, j, 0)),
+            pl.BlockSpec((1, 1, bt, dv), lambda si, h, j, ln: (si, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dv), lambda si, h, j, ln: (si, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda si, h, j, ln: (si, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda si, h, j, ln: (si, h, 0, 0)),
+        ])
+    o, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((s, hkv, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((s, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, hkv, g, 1), jnp.float32),
+        ],
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "parallel", "arbitrary")),
+    )(lengths.astype(jnp.int32), q, k, v)
+    return o.astype(q.dtype)
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, *refs, scale: float,
+                  window: int | None, ps: int, ppt: int, nt: int):
+    krefs, vrefs = refs[:ppt], refs[ppt:2 * ppt]
+    o_ref, m_ref, n_ref = refs[2 * ppt:]
+    s_idx = pl.program_id(0)
+    j = pl.program_id(2)
+    # Each of the tile's ppt pages arrived via its own scalar-prefetch
+    # block fetch (non-contiguous in the arena); concatenated they form
+    # the contiguous logical window [j*ppt*ps, (j+1)*ppt*ps).
+    k = jnp.concatenate([r[0, :, 0].astype(jnp.float32) for r in krefs], 0)
+    v = jnp.concatenate([r[0, :, 0].astype(jnp.float32) for r in vrefs], 0)
+    kpos = (j * (ppt * ps)
+            + jax.lax.broadcasted_iota(jnp.int32, (1, ppt * ps), 1))
+    _mn_fold_tile(o_ref, m_ref, n_ref, q_ref[0, 0].astype(jnp.float32),
+                  k, v, kpos, len_ref[s_idx], scale=scale, window=window,
+                  j=j, last_j=nt - 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "window", "pages_per_tile"))
+def decode_attention_paged_pallas(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array, page_table: jax.Array,
+                                  lengths: jax.Array, *, scale: float,
+                                  window: int | None = None,
+                                  pages_per_tile: int = 1) -> jax.Array:
+    """Single-query attention against a PAGED cache, Pallas path.
+
+    q: [S, Hkv, G, D]; k_pages/v_pages: [P, ps, Hkv, D|Dv] page arenas
+    (``kv_cache.init_paged_pool`` layout); page_table: [S, Pmax] int32;
+    lengths: [S] int32.  Both int32 operands are scalar-prefetched: the
+    per-page BlockSpec index maps read ``page_table`` directly, so each
+    grid step DMAs ``pages_per_tile`` non-contiguous arena pages into VMEM
+    and attends them as one contiguous logical window.  Table entries
+    backing no valid position (free slots, pages past ``lengths``, the
+    pad below) may point anywhere in the arena — the length mask makes
+    their content invisible.  Returns [S, Hkv, G, Dv] in q.dtype.
+    """
+    s, hkv, g, d = q.shape
+    ps = k_pages.shape[1]
+    dv = v_pages.shape[3]
+    pmax = page_table.shape[1]
+    ppt = max(1, min(pages_per_tile, pmax, MAX_PAGES_PER_TILE))
+    ppad = pl.cdiv(pmax, ppt) * ppt
+    if ppad != pmax:
+        # pad the table with arena page 0 (the pool's trash page; any
+        # in-bounds id works — padded logical positions are masked)
+        page_table = jnp.pad(page_table, ((0, 0), (0, ppad - pmax)))
+    nt = ppad // ppt
+
+    def page_spec(i, width):
+        return pl.BlockSpec(
+            (1, ps, 1, width),
+            lambda si, h, j, tab, ln, i=i: (tab[si, j * ppt + i], 0, h, 0))
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               ps=ps, ppt=ppt, nt=nt)
+    grid_spec = _grid_spec(
+        2, (s, hkv, nt),
+        in_specs=(
+            [pl.BlockSpec((1, 1, g, d),
+                          lambda si, h, j, tab, ln: (si, h, 0, 0))]
+            + [page_spec(i, d) for i in range(ppt)]
+            + [page_spec(i, dv) for i in range(ppt)]),
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dv),
+                         lambda si, h, j, tab, ln: (si, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1),
+                         lambda si, h, j, tab, ln: (si, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1),
+                         lambda si, h, j, tab, ln: (si, h, 0, 0)),
+        ])
+    o, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((s, hkv, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((s, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, hkv, g, 1), jnp.float32),
+        ],
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "parallel", "arbitrary")),
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, *([k_pages] * ppt), *([v_pages] * ppt))
+    return o.astype(q.dtype)

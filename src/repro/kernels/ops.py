@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.softmax_api import SoftmaxAlgorithm
+from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import registry
@@ -214,6 +215,12 @@ flash_attention.defvjp(_flash_fwd, _flash_bwd)
 # (the continuous-batching serving hot path).  Online-softmax accumulation in
 # the paper's (m, n) representation — rescales are exact powers of two — so
 # KV can be consumed in chunks without ever materializing a full softmax row.
+#
+# Two implementations per op, dispatched on SoftmaxPolicy.use_kernels (or an
+# explicit ``use_kernel=``): the Pallas kernels in kernels/decode_attention.py
+# (length mask + page-table gather fused into the VMEM KV sweep; interpret
+# mode on CPU) and the jnp chunked forms below, which remain the reference /
+# fallback the kernels are tested against.
 # ---------------------------------------------------------------------------
 MAX_SLOT_CHUNKS = 8          # unrolled-loop guards (chunk loops are Python-
 MAX_T_CHUNKS = 16            # unrolled; counts bound the traced HLO size)
@@ -348,12 +355,29 @@ def _decode_attention_paged_chunked(q, k_pages, v_pages, page_table, lengths,
     return jnp.concatenate(outs, axis=0).astype(q.dtype)
 
 
+def _kernel_path(policy, use_kernel) -> bool:
+    """Decode-op dispatch.  Explicit ``use_kernel`` wins unconditionally
+    (tests/tuner callers pick their path knowingly); otherwise the
+    policy's ``use_kernels`` switch routes to the Pallas kernels ONLY on
+    backends that can run them — TPU for real, CPU in interpret mode.
+    The decode kernels' scalar-prefetch grid spec is TPU-specific, so a
+    GPU policy falls back to the jnp (m, n) forms instead of failing to
+    lower in the serving hot path (matching
+    ``autotune.decode_kernel_path``, which tunes the jnp path there)."""
+    if use_kernel is not None:
+        return bool(use_kernel)
+    if policy is None or not policy.use_kernels:
+        return False
+    return jax.default_backend() in ("cpu", "tpu")
+
+
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      lengths: jax.Array, *, scale: float | None = None,
                      window: int | None = None,
                      block_s: int | None = None,
                      block_t: int | None = None,
-                     policy=None) -> jax.Array:
+                     policy=None, use_kernel: bool | None = None
+                     ) -> jax.Array:
     """Single-query attention against a length-masked KV cache.
 
     q: [S, Hkv, G, D] (one query per slot, grouped heads); k: [S, Hkv, T, D];
@@ -361,11 +385,15 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     (position ``lengths - 1`` holds the slot's own query token; 0 marks a
     free slot, whose output is exact zeros).  Returns [S, Hkv, G, Dv].
 
-    Registry resolution: rows = S (slots), cols = T (cache positions); the
-    resolved blocks are chunk lengths for the unrolled (m, n) loop, capped
-    by ``MAX_SLOT_CHUNKS``/``MAX_T_CHUNKS``.  ``block_s``/``block_t`` are
-    explicit overrides (what the autotuner sweeps); ``policy`` carries attn
-    overrides + the autotune cache setting.
+    Registry resolution: rows = S (slots), cols = T (cache positions).
+    ``block_s``/``block_t`` are explicit overrides (what the autotuner
+    sweeps); ``policy`` carries attn overrides + the autotune cache
+    setting.  Dispatch (``policy.use_kernels`` / explicit ``use_kernel``):
+    the Pallas kernel streams KV in ``block_t`` VMEM tiles with the length
+    mask fused into the sweep (``block_s`` does not apply — the kernel
+    grid is one row per slot); the jnp fallback uses the resolved blocks
+    as chunk lengths for the unrolled (m, n) loop, capped by
+    ``MAX_SLOT_CHUNKS``/``MAX_T_CHUNKS``.
     """
     s, _, _, d = q.shape
     t = k.shape[2]
@@ -373,6 +401,9 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      policy)
     if scale is None:
         scale = 1.0 / (d ** 0.5)
+    if _kernel_path(policy, use_kernel):
+        return _da.decode_attention_pallas(q, k, v, lengths, scale=scale,
+                                           window=window, block_t=bt)
     return _decode_attention_chunked(
         q, k, v, lengths, scale=scale, window=window,
         n_s_chunks=min(MAX_SLOT_CHUNKS, -(-s // bs)),
@@ -385,7 +416,8 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
                            window: int | None = None,
                            block_s: int | None = None,
                            block_t: int | None = None,
-                           policy=None) -> jax.Array:
+                           policy=None, use_kernel: bool | None = None
+                           ) -> jax.Array:
     """Single-query attention against a PAGED KV cache.
 
     q: [S, Hkv, G, D]; k_pages: [P, ps, Hkv, D]; v_pages: [P, ps, Hkv, Dv]
@@ -402,6 +434,12 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
     gathers full pages through the table.  Entries of the table that back
     no valid position (a free slot, or pages past ``lengths``) may point
     anywhere — the length mask makes their content invisible.
+
+    Dispatch (``policy.use_kernels`` / explicit ``use_kernel``): the Pallas
+    kernel gathers the arena pages tile-by-tile in VMEM through the
+    scalar-prefetched table (``pages_per_tile = block_t // ps``, capped by
+    ``decode_attention.MAX_PAGES_PER_TILE``); the jnp fallback gathers
+    whole page chunks via ``jnp.take`` into the shared (m, n) sweep.
     """
     s, _, _, d = q.shape
     ps = k_pages.shape[1]
@@ -412,6 +450,10 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     pages_per_chunk = max(1, bt // ps)
+    if _kernel_path(policy, use_kernel):
+        return _da.decode_attention_paged_pallas(
+            q, k_pages, v_pages, page_table, lengths, scale=scale,
+            window=window, pages_per_tile=pages_per_chunk)
     return _decode_attention_paged_chunked(
         q, k_pages, v_pages, page_table, lengths, scale=scale, window=window,
         n_s_chunks=min(MAX_SLOT_CHUNKS, -(-s // bs)),
@@ -437,5 +479,5 @@ registry.bind("softmax", _tp2.twopass_softmax_2d)
 registry.bind("logsumexp", _tp2.twopass_stats_2d)
 registry.bind("xent", _xent.xent_fwd_2d)
 registry.bind("flash_attention", _fa.flash_attention_gqa)
-registry.bind("decode_attention", _decode_attention_chunked)
-registry.bind("decode_attention_paged", _decode_attention_paged_chunked)
+registry.bind("decode_attention", _da.decode_attention_pallas)
+registry.bind("decode_attention_paged", _da.decode_attention_paged_pallas)

@@ -273,13 +273,16 @@ register(KernelSpec(name="chunk_attention", row_align=256, row_cap=2048,
 # decode attention (ops.decode_attention): single-query attention against a
 # length-masked slot-major KV cache (continuous-batching decode).  rows =
 # SLOTS (each slot carries exactly one query), cols = cache positions (Skv
-# allocation); blocks are chunk LENGTHS along those axes for the unrolled
-# (m, n) online-softmax path — counts are the ceil-div, capped by
-# ops.MAX_SLOT_CHUNKS/MAX_T_CHUNKS.  The heuristic keeps typical serving
-# shapes (pools <= 256 slots, caches <= 4096 positions) single-chunk; the
-# sweep may find streaming chunks profitable for long caches.  Like
-# chunk_attention this streams through XLA (no VMEM tile), so the sweep
-# budget is wide.
+# allocation).  Two implementations share the spec (dispatch on
+# SoftmaxPolicy.use_kernels): the Pallas kernel
+# (kernels/decode_attention.py) streams KV in block_cols VMEM tiles — the
+# slot axis never tiles, one grid row per slot — while the jnp fallback
+# uses the blocks as chunk LENGTHS for its unrolled (m, n) loop (counts =
+# ceil-div capped by ops.MAX_SLOT_CHUNKS/MAX_T_CHUNKS).  The heuristic
+# keeps typical serving shapes (pools <= 256 slots, caches <= 4096
+# positions) single-chunk; the sweep may find streaming tiles profitable
+# for long caches.  The jnp path streams through XLA (no VMEM tile), so
+# the sweep budget is wide.
 register(KernelSpec(name="decode_attention", row_align=8, row_cap=256,
                     col_align=128, col_cap=2048, full_col_threshold=4096,
                     tune_row_cap=256, tune_col_cap=4096,
@@ -289,7 +292,10 @@ register(KernelSpec(name="decode_attention", row_align=8, row_cap=256,
 # shared page arena (serving/kv_cache.init_paged_pool) instead of read from
 # a contiguous slot strip.  rows = slots, cols = LOGICAL cache positions
 # (page_table width * page size); the resolved col block is rounded to a
-# whole number of pages so every gather touches full pages.
+# whole number of pages so every gather touches full pages — on the Pallas
+# path that page count per tile is the scalar-prefetch gather width
+# (capped by decode_attention.MAX_PAGES_PER_TILE); the jnp fallback feeds
+# it to per-chunk jnp.take gathers.
 register(KernelSpec(name="decode_attention_paged", row_align=8, row_cap=256,
                     col_align=128, col_cap=2048, full_col_threshold=4096,
                     tune_row_cap=256, tune_col_cap=4096,

@@ -38,8 +38,10 @@ def _tpu_params(dims: tuple[str, ...]) -> dict:
         return {}
     from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
 
-    return {"compiler_params": pltpu.CompilerParams(
-        dimension_semantics=dims)}
+    # renamed TPUCompilerParams -> CompilerParams across jax releases
+    params_cls = getattr(pltpu, "CompilerParams", None) or \
+        pltpu.TPUCompilerParams
+    return {"compiler_params": params_cls(dimension_semantics=dims)}
 
 
 def _pass1_kernel(x_ref, m_ref, n_ref):

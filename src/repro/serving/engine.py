@@ -112,7 +112,10 @@ def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
 
     Returns (logits [S, V_padded], new_pool).  Per-slot positions are the
     current ``lengths`` (write-then-attend); attention masking runs through
-    the ``decode_attention`` / ``decode_attention_paged`` registry op.
+    the ``decode_attention`` / ``decode_attention_paged`` registry ops —
+    the Pallas kernels (kernels/decode_attention.py) when the config
+    policy's ``use_kernels`` is set, the jnp (m, n) reference forms
+    otherwise.
     """
     if cfg.family == "encdec":
         raise NotImplementedError(

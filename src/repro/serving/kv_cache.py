@@ -43,6 +43,8 @@ from repro.configs.base import ModelConfig
 
 
 def cache_dtype(cfg: ModelConfig):
+    """KV-cache storage dtype: the model's compute dtype (recurrent ssm
+    state is the exception — it accumulates in f32 regardless)."""
     return jnp.dtype(cfg.dtype)
 
 
@@ -271,7 +273,12 @@ def free_slot_paged(pool: dict, slot) -> dict:
 
 
 def set_page_row(pool: dict, slot, page_row) -> dict:
-    """Update one slot's page-table row (page growth during decode)."""
+    """Update one slot's page-table row (page growth during decode: the
+    scheduler's ``_ensure_pages`` allocates pages for upcoming write
+    positions and mirrors them here before each burst).  Invariant: every
+    entry past the slot's allocated pages must be the trash page, so the
+    jitted step's write at position ``lengths`` can never land in a page
+    the allocator still considers free."""
     return {**pool, "page_table": pool["page_table"].at[slot].set(
         page_row.astype(jnp.int32))}
 
@@ -295,12 +302,19 @@ class PageAllocator:
         return self.n_pages - 1
 
     def alloc(self, n: int) -> list[int] | None:
-        """``n`` distinct pages, or None (nothing allocated) if short."""
+        """``n`` distinct pages, or None (nothing allocated) if short —
+        all-or-nothing, so a failed admission/growth never leaks a
+        partial allocation the caller would have to unwind."""
         if n > len(self._free):
             return None
         return [self._free.pop() for _ in range(n)]
 
     def free(self, page_ids) -> None:
+        """Return pages to the free list (retirement or preemption).
+        Callers must reset the owning table row to the trash page FIRST
+        (``free_slot_paged``): a freed page may be handed to another slot
+        in the same scheduler iteration, and the old owner's dead writes
+        would otherwise corrupt it."""
         for p in page_ids:
             assert 0 < p < self.n_pages, f"bad page id {p}"
             assert p not in self._free, f"double free of page {p}"
@@ -312,6 +326,10 @@ class PageAllocator:
 # ---------------------------------------------------------------------------
 def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
                 tp: int = 1) -> int:
+    """Total bytes of a plain (non-pool) decode cache, computed via
+    ``eval_shape`` — no device allocation, safe at any size.  The budget
+    helpers below all follow this pattern: evaluate shapes at two sizes
+    and solve the affine byte model instead of materializing pools."""
     cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len, tp))
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 

@@ -68,7 +68,16 @@ def _round_up(x: int, mult: int) -> int:
 
 @dataclass
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    ``arrival_s`` is the offer time as an offset from ``run()`` start —
+    honored against the wall clock when any pending request has a
+    positive one (open-loop traffic), else everything is offered at t=0.
+    ``resumed`` marks a requeue after a page preemption: its prompt is
+    the ORIGINAL prompt plus the tokens generated before eviction
+    (recompute on readmission), and admission failures retire it with
+    what it produced instead of raising.
+    """
     rid: int
     prompt: tuple[int, ...]            # prompt token ids
     max_new_tokens: int = 32
@@ -83,7 +92,17 @@ class Request:
 
 @dataclass
 class Completion:
-    """A finished request: its sampled tokens + scheduling timeline."""
+    """A finished request: its sampled tokens + scheduling timeline.
+
+    ``reason``: ``"max_tokens"`` (budget reached), ``"eos"`` (the
+    configured eos token was sampled), ``"cache_full"`` (the sequence hit
+    ``max_len``), or ``"oom_pages"`` (a lone request the page arena could
+    not grow — it keeps whatever it generated).  ``seq`` is the admission
+    order; preemption evicts the HIGHEST seq (LIFO — the youngest request
+    has the least sunk prefill+decode work to recompute).  Tokens
+    generated before a preemption are folded back in (`_merge_carried`),
+    so a completion is always one uninterrupted stream.
+    """
     rid: int
     slot: int
     prompt_len: int
@@ -283,9 +302,14 @@ class ContinuousBatchingEngine:
         self.pending.sort(key=lambda r: r.arrival_s)
 
     def free_slots(self) -> list[int]:
+        """Slots with no owner — admission targets, backfilled between
+        decode bursts (host-side view; the device-side marker is
+        ``lengths[slot] == 0``)."""
         return [i for i, o in enumerate(self.slot_owner) if o is None]
 
     def active_slots(self) -> list[int]:
+        """Slots currently owned by an in-flight request (the rows the
+        next ragged burst advances)."""
         return [i for i, o in enumerate(self.slot_owner) if o is not None]
 
     # -- paged bookkeeping ---------------------------------------------------
