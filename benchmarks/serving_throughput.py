@@ -11,11 +11,21 @@ request stream at several byte budgets and reports:
     tables + bucketed prefill): prefill tok/s and decode tok/s separately
     (the phases have different arithmetic intensity — a single aggregate
     hides the bound one) and requests/s end to end,
+  * time-to-first-token (p50/p95 over the served requests) alongside the
+    tok/s rows — TTFT is the latency metric prefix sharing moves, and a
+    throughput-only report would hide it,
   * the strip pool (slot-major ``max_len`` strips) at the SAME byte
     budget: its decode tok/s, plus ``paged_vs_strip_concurrency`` — how
     many concurrent requests each pool design admits for that budget (the
     tentpole memory claim: paged capacity is bounded by tokens in flight,
     strips reserve ``max_len`` per request whatever the workload uses),
+  * a SHARED-PREFIX lane: the same greedy workload — N requests sharing a
+    4-page prompt prefix — served at identical pool dims with the prefix
+    cache off vs on.  Token parity is a hard assert (greedy decode must
+    not change when matched pages are adopted by reference and only the
+    tail prefills); the direction-aware ratio rows
+    (``ttft_unshared_vs_shared``, ``req_s_shared_vs_unshared``, higher is
+    better) are the acceptance metrics for prefix sharing,
   * a static-batching baseline: the PR-2 ``engine.generate`` lockstep loop
     serving the same workload in fixed batches — every batch decodes until
     its slowest member finishes, which is exactly the waste continuous
@@ -132,6 +142,72 @@ def _kernel_lane(model, params, base, n_requests, prompt_len, max_new,
         f"{kth['decode_tok_s']:.1f}tok/s (tokens == jnp path)")]
 
 
+def _ttft_us(completions, q):
+    tt = [c.ttft_s for c in completions if c.ttft_s is not None]
+    return float(np.percentile(tt, q)) * 1e6 if tt else 0.0
+
+
+def _prefix_lane(model, params, base, page_size, vocab, seed):
+    """Shared-prefix serving lane: 6 greedy requests whose prompts share a
+    4-page prefix (distinct one-page tails), served twice at IDENTICAL
+    pool dims — prefix cache off (every request prefills its whole
+    prompt) vs on (matched pages adopted by reference, tail-only
+    prefill).  Same byte budget by construction; what changes is how many
+    of those bytes are written twice.  The warmup requests carry the same
+    shared prefix, so the measured region is the steady state — prefix
+    resident, every request a hit (the system-prompt serving pattern).
+    Greedy token parity is a hard assert — this is the CI smoke's
+    prefix-sharing gate."""
+    from repro.serving.scheduler import Request
+
+    n, slots, max_new = 6, 4, 6
+    prefix_len, tail_len = 4 * page_size, page_size
+    plen = prefix_len + tail_len
+    max_len = 2 * plen
+    rng = np.random.default_rng(seed + 17)
+    shared = tuple(int(t) for t in rng.integers(0, vocab, prefix_len))
+    tails = [tuple(int(t) for t in rng.integers(0, vocab, tail_len))
+             for _ in range(n)]
+    warm_tails = [tuple(int(t) for t in rng.integers(0, vocab, tail_len))
+                  for _ in range(2)]
+
+    def serve(share):
+        eng = model.serving_engine(
+            params, slots=slots, max_len=max_len, seed=seed, paged=True,
+            page_size=page_size, temperature=0.0, prefix_cache=share)
+        # warm both prefill shapes (full bucket + tail bucket) and the
+        # ragged step; the warm requests carry the shared prefix, so the
+        # cache-on engine enters the measured region with it resident
+        eng.run([Request(rid=-1 - i, prompt=shared + warm_tails[i],
+                         max_new_tokens=3) for i in range(2)])
+        eng.reset_stats()
+        comps = eng.run([Request(rid=i, prompt=shared + tails[i],
+                                 max_new_tokens=max_new) for i in range(n)])
+        return eng.throughput(), comps, [tuple(c.tokens) for c in comps]
+
+    uth, ucomps, utoks = serve(False)
+    sth, scomps, stoks = serve(True)
+    if stoks != utoks:
+        raise RuntimeError(
+            "prefix sharing changed greedy tokens in the serving smoke: "
+            f"{stoks} != {utoks}")
+    u50, s50 = _ttft_us(ucomps, 50), _ttft_us(scomps, 50)
+    ttft_ratio = u50 / max(s50, 1e-9)
+    req_ratio = sth["requests_s"] / max(uth["requests_s"], 1e-9)
+    reused = sth["prefix_tokens_reused"]
+    return [
+        (f"{base}/prefix/ttft_shared_p50", round(s50, 2),
+         f"{sth['prefix_hits']}hits {reused}tok reused "
+         "(tokens == unshared path)"),
+        (f"{base}/prefix/ttft_unshared_p50", round(u50, 2),
+         f"prefix={prefix_len}tok x{n}reqs"),
+        (f"{base}/prefix/ttft_unshared_vs_shared", round(ttft_ratio, 3),
+         f"{ttft_ratio:.2f}x first-token latency"),
+        (f"{base}/prefix/req_s_shared_vs_unshared", round(req_ratio, 3),
+         f"{sth['requests_s']:.2f} vs {uth['requests_s']:.2f}req/s"),
+    ]
+
+
 def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
         slots_list=(1, 4, 8), prompt_len: int = 16, max_new: int = 24,
         max_len: int = 64, arrival_rate: float | None = None, seed: int = 0,
@@ -185,6 +261,12 @@ def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
             th["decode_tok_s"], 1e-9), 2), f"{th['decode_tok_s']:.1f}tok/s"))
         rows.append((f"{base}/requests", round(th["wall_s"] * 1e6, 2),
                      f"{th['requests_s']:.2f}req/s"))
+        rows.append((f"{base}/ttft_p50",
+                     round(_ttft_us(eng.completions, 50), 2),
+                     "offer -> first token"))
+        rows.append((f"{base}/ttft_p95",
+                     round(_ttft_us(eng.completions, 95), 2),
+                     "offer -> first token"))
 
         if paged_ok and kernel_lane:
             rows.extend(_kernel_lane(
@@ -217,6 +299,9 @@ def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
         speed = th["decode_tok_s"] / max(bl["decode_tok_s"], 1e-9)
         rows.append((f"{base}/continuous_vs_static", round(speed, 3),
                      f"{speed:.2f}x"))
+    if paged_ok and cfg.family in ("dense", "vlm"):
+        rows.extend(_prefix_lane(model, params, f"serving/{arch}",
+                                 page_size, vocab, seed))
     return emit(rows)
 
 

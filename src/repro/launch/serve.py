@@ -38,6 +38,13 @@ def main():
                    help="Poisson request arrivals per second "
                         "(default: all offered at t=0)")
     p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--shared-prefix-len", type=int, default=0,
+                   help="give every request the same first N prompt tokens "
+                        "(exercises the prefix cache: whole matched pages "
+                        "are adopted by reference, only the tail prefills)")
+    p.add_argument("--no-prefix-cache", action="store_true",
+                   help="disable prefix sharing (default: on wherever the "
+                        "family supports exact tail prefill)")
     p.add_argument("--steps", type=int, default=32,
                    help="max new tokens per request")
     p.add_argument("--temperature", type=float, default=1.0)
@@ -85,14 +92,17 @@ def main():
             max_len=args.prompt_len + args.steps + 8,
             temperature=args.temperature, seed=2,
             paged=False if args.strip else "auto",
-            page_size=args.page_size, pages=args.pages)
+            page_size=args.page_size, pages=args.pages,
+            prefix_cache=False if args.no_prefix_cache else "auto")
         rng = np.random.default_rng(0)
         arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                               args.requests))
                     if args.arrival_rate else np.zeros(args.requests))
+        head = tuple(rng.integers(0, cfg.vocab, args.shared_prefix_len))
         reqs = [Request(rid=i,
-                        prompt=tuple(rng.integers(0, cfg.vocab,
-                                                  args.prompt_len)),
+                        prompt=head + tuple(rng.integers(
+                            0, cfg.vocab,
+                            args.prompt_len - len(head))),
                         max_new_tokens=args.steps,
                         arrival_s=float(arrivals[i]))
                 for i in range(args.requests)]
@@ -106,6 +116,18 @@ def main():
               f"{args.slots} slots / {pool} ({st['steps']} ragged decode "
               f"steps, {st['admitted']} admissions, "
               f"{len(eng._prefill_shapes)} prefill bucket compiles)")
+        if eng.prefix_cache is not None:
+            print(f"prefix cache: {st['prefix_hits']} hits, "
+                  f"{st['prefix_tokens_reused']} prompt tok adopted by "
+                  f"reference, {st['cow_copies']} copy-on-write page "
+                  f"copies, {st['prefix_evictions']} evictions, "
+                  f"{eng.prefix_cache.n_pages} pages indexed")
+        elif not args.no_prefix_cache and eng.paged:
+            print("prefix cache: off (family needs full-prompt prefill)")
+        ttfts = sorted(c.ttft_s for c in comps if c.ttft_s is not None)
+        if ttfts:
+            print(f"ttft: p50 {ttfts[len(ttfts) // 2] * 1e3:.2f}ms  "
+                  f"max {ttfts[-1] * 1e3:.2f}ms")
         print("sample row:", comps[0].tokens[:16])
 
     pre = st["prefill_tokens"] / max(st["prefill_s"], 1e-9)

@@ -164,18 +164,26 @@ def init_lm(key, cfg: ModelConfig, tp: int = 1) -> Params:
     return p
 
 
-def _positions_for(cfg: ModelConfig, b: int, s: int, start=0):
-    """Position ids; M-RoPE 3-stream ids for vlm (vision grid then text)."""
+def _positions_at(cfg: ModelConfig, b: int, idx):
+    """Position ids for explicit token indices ``idx`` ([s], may be
+    traced); M-RoPE 3-stream ids for vlm (vision grid then text).  Prefix
+    sharing's tail prefill passes ``arange(s) + start`` so the tail sees
+    the SAME per-index mapping a full-prompt prefill would."""
     if cfg.mrope_sections is None:
-        return jnp.arange(s) + start
+        return idx
     npz = cfg.n_patches
     grid = max(1, int(round(npz ** 0.5)))
-    idx = jnp.arange(s)
     t_pos = jnp.where(idx < npz, 0, idx - npz + grid)
     h_pos = jnp.where(idx < npz, idx // grid, idx - npz + grid)
     w_pos = jnp.where(idx < npz, idx % grid, idx - npz + grid)
-    pos = jnp.stack([t_pos, h_pos, w_pos]) + start
+    pos = jnp.stack([t_pos, h_pos, w_pos])
+    s = idx.shape[0]
     return jnp.broadcast_to(pos[:, None, :], (3, b, s))
+
+
+def _positions_for(cfg: ModelConfig, b: int, s: int, start=0):
+    """Position ids for a prompt's first ``s`` tokens (offset ``start``)."""
+    return _positions_at(cfg, b, jnp.arange(s) + start)
 
 
 def _cos_sin(cfg: ModelConfig, positions):

@@ -243,6 +243,72 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
     return logits, new_cache
 
 
+def gather_pages(kv: dict, page_row):
+    """Gather arena pages into a batch=1 position-major prefill cache:
+    each leaf ``[L, P, ps, ...]`` -> ``[L, 1, len(page_row) * ps, ...]``
+    with ``page_row``'s pages laid out contiguously.  The prefix-sharing
+    read path: a matched prompt prefix's K/V is lifted out of the arena so
+    the tail can prefill *after* it (``prefill_extend``), without the arena
+    ever being written.  Entries past the matched prefix may be the trash
+    page — their garbage sits beyond ``cache_pos`` and is overwritten by
+    the tail's own writes or masked by ``kv_len``."""
+    def one(leaf):
+        g = leaf[:, page_row]                     # [L, n, ps, ...]
+        return g.reshape(g.shape[0], 1, g.shape[1] * g.shape[2],
+                         *g.shape[3:])
+    return jax.tree.map(one, kv)
+
+
+def prefill_extend(params: Params, tokens, kv: dict, page_row, start_pos, *,
+                   cfg: ModelConfig, tp: int = 1,
+                   moe_impl: str = "dispatch", last_pos=None):
+    """Prefill only the TAIL of a prompt whose first ``start_pos`` positions
+    already have K/V in arena pages (prefix sharing).
+
+    ``tokens``: [1, t] the prompt tokens from ``start_pos`` on (padded to a
+    tail bucket; real length implied by ``last_pos``).  ``kv``: the paged
+    pool's arena leaves.  ``page_row``: int32 [n] pages whose gather covers
+    positions ``[0, n * ps)`` of this prompt — the matched prefix chain,
+    trash-padded.  ``start_pos``/``last_pos`` may be traced: one compile
+    serves every (allocation, tail-bucket) shape pair.
+
+    Equivalence with a full-prompt prefill is exact, not approximate: the
+    cached prefix K/V are the same values a full prefill would recompute
+    (same params, same positions — RoPE is applied at the ORIGINAL indices
+    via ``_positions_at``), attention attends over cache-prefix + tail with
+    the same causal/window/length masks (``kv_len = cache_pos + t``), and
+    the paper's (m, n) accumulation is order-free, so per-token outputs —
+    and greedy samples — match token-for-token.
+
+    Returns (last-token logits, batch=1 position-major cache of length
+    ``n * ps``) — the cache holds prefix AND tail, so adoption can copy
+    any fresh page from it.
+    """
+    b, t = tokens.shape
+    cache = gather_pages(kv, page_row)
+    idx = jnp.arange(t) + jnp.asarray(start_pos, jnp.int32)
+    cos, sin = transformer._cos_sin(cfg, transformer._positions_at(cfg, b,
+                                                                   idx))
+    x = layers.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+    def body(h, xs):
+        pl, cl = xs
+        h2, new_c = transformer.block_apply(pl, h, cos, sin, cfg=cfg, tp=tp,
+                                            cache=cl, cache_pos=start_pos,
+                                            moe_impl=moe_impl)
+        return h2, new_c
+
+    h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
+    h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
+    if last_pos is None:
+        hl = h[:, -1]
+    else:
+        hl = h[jnp.arange(b), jnp.broadcast_to(
+            jnp.asarray(last_pos, jnp.int32), (b,))]
+    logits = transformer.lm_logits(params, hl, cfg=cfg)
+    return logits, new_cache
+
+
 def sample_token(logits, key, temperature: float = 1.0, *,
                  cfg: ModelConfig | None = None, vocab: int | None = None,
                  policy: SoftmaxPolicy | None = None):

@@ -230,7 +230,10 @@ def _copy_pages(dst, src, page_row):
     a whole number of pages (bucketed prefill guarantees it); source pages
     past the table width — a bucket wider than the slot — are dropped, and
     table entries past the allocated count are trash (their copies land in
-    the trash page, garbage over garbage)."""
+    the trash page, garbage over garbage).  Prefix sharing routes the row
+    entries it adopts BY REFERENCE to the trash page too (``copy_row`` in
+    :func:`adopt_slot_paged`): a shared page is someone else's bytes and
+    must never be written."""
     ls, _, ps = dst.shape[:3]
     n_src = src.shape[2] // ps
     n_copy = min(n_src, page_row.shape[0])
@@ -238,24 +241,33 @@ def _copy_pages(dst, src, page_row):
     return dst.at[:, page_row[:n_copy]].set(srcp.astype(dst.dtype))
 
 
-def adopt_slot_paged(pool: dict, cache, slot, length, page_row) -> dict:
+def adopt_slot_paged(pool: dict, cache, slot, length, page_row,
+                     copy_row=None) -> dict:
     """Admit a freshly prefilled batch=1 cache into ``slot`` of a paged
     pool.  ``page_row`` is the slot's FULL page-table row (int32
     ``[pages_per_slot]``): the first ``ceil(length / ps)`` entries are the
     allocated arena pages, the rest the trash page.  ``cache`` must come
     from ``engine.prefill`` with a position allocation that is a multiple
     of the page size.  jit-safe: ``slot``/``length``/``page_row`` may be
-    traced (shapes are static)."""
+    traced (shapes are static).
+
+    ``copy_row`` (default: ``page_row``) decouples where cache pages are
+    WRITTEN from what the table ROW references — the copy-on-write seam for
+    prefix sharing: matched prefix pages appear in ``page_row`` (adopted by
+    reference) but their ``copy_row`` entries are the trash page (never
+    written), while the divergent/partial tail copies into fresh pages."""
     kv = pool["kv"]
+    if copy_row is None:
+        copy_row = page_row
     if "attn" in kv:                               # hybrid: ssm slot-major
         new_kv = {
             "attn": {n: _copy_pages(kv["attn"][n], cache["attn"][n],
-                                    page_row) for n in ("k", "v")},
+                                    copy_row) for n in ("k", "v")},
             "ssm": jax.lax.dynamic_update_slice_in_dim(
                 kv["ssm"], cache["ssm"].astype(kv["ssm"].dtype), slot,
                 axis=1)}
     else:
-        new_kv = {n: _copy_pages(kv[n], cache[n], page_row) for n in kv}
+        new_kv = {n: _copy_pages(kv[n], cache[n], copy_row) for n in kv}
     return {"kv": new_kv,
             "page_table": pool["page_table"].at[slot].set(
                 page_row.astype(jnp.int32)),
@@ -284,14 +296,22 @@ def set_page_row(pool: dict, slot, page_row) -> dict:
 
 
 class PageAllocator:
-    """Host-side free list over arena pages ``1 .. pages - 1`` (page 0 is
-    the trash page and is never handed out).  Device state never sees this —
-    the scheduler allocs/frees here and mirrors decisions into the pool's
-    page table."""
+    """Host-side refcounted free list over arena pages ``1 .. pages - 1``
+    (page 0 is the trash page and is never handed out).  Device state never
+    sees this — the scheduler allocs/frees here and mirrors decisions into
+    the pool's page table.
+
+    Refcounts are what make prefix sharing safe: a page handed out by
+    :meth:`alloc` starts at refcount 1; every additional reader (another
+    slot's page table, the prefix index) takes a reference with
+    :meth:`share`; :meth:`free` drops one reference and the page returns to
+    the free list only when its LAST reader leaves.  A ``free`` past zero
+    is the double-free bug class paging is famous for, and asserts."""
 
     def __init__(self, pages: int):
         self.n_pages = int(pages)
         self._free = list(range(self.n_pages - 1, 0, -1))
+        self._refs = [0] * self.n_pages
 
     @property
     def free_pages(self) -> int:
@@ -301,24 +321,43 @@ class PageAllocator:
     def usable_pages(self) -> int:
         return self.n_pages - 1
 
+    def refcount(self, page_id: int) -> int:
+        """Current reader count of one page (0 = on the free list)."""
+        return self._refs[page_id]
+
     def alloc(self, n: int) -> list[int] | None:
-        """``n`` distinct pages, or None (nothing allocated) if short —
-        all-or-nothing, so a failed admission/growth never leaks a
-        partial allocation the caller would have to unwind."""
+        """``n`` distinct pages (each at refcount 1), or None (nothing
+        allocated) if short — all-or-nothing, so a failed admission/growth
+        never leaks a partial allocation the caller would have to unwind."""
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._refs[p] = 1
+        return out
+
+    def share(self, page_ids) -> None:
+        """Take one additional reference on each page (prefix sharing: a
+        second slot's table row, or the prefix index itself, now reads the
+        page).  Sharing a free page is a use-after-free and asserts."""
+        for p in page_ids:
+            assert 0 < p < self.n_pages, f"bad page id {p}"
+            assert self._refs[p] > 0, f"share of free page {p}"
+            self._refs[p] += 1
 
     def free(self, page_ids) -> None:
-        """Return pages to the free list (retirement or preemption).
+        """Drop one reference per page (retirement, preemption, or prefix
+        eviction); a page returns to the free list only at refcount 0.
         Callers must reset the owning table row to the trash page FIRST
         (``free_slot_paged``): a freed page may be handed to another slot
         in the same scheduler iteration, and the old owner's dead writes
         would otherwise corrupt it."""
         for p in page_ids:
             assert 0 < p < self.n_pages, f"bad page id {p}"
-            assert p not in self._free, f"double free of page {p}"
-            self._free.append(p)
+            assert self._refs[p] > 0, f"double free of page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
 
 
 # ---------------------------------------------------------------------------

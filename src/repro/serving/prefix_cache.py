@@ -1,0 +1,225 @@
+"""Radix-tree prefix index over the paged KV arena (prefix sharing).
+
+Decode attention is memory-bandwidth-bound, so the cheapest KV byte is one
+never written: when requests share a prompt prefix (system prompts, few-shot
+headers), the pages holding that prefix's K/V are identical across requests
+and need to exist in the arena exactly once.  The online (m, n) softmax
+accumulation that already powers ``decode_attention_paged`` makes the read
+side free — the kernel sweeps a slot's KV through its page-table row in
+arbitrary arena order, so two rows aliasing the same physical page is
+indistinguishable from two private copies.  What this module adds is the
+bookkeeping that makes aliasing safe and findable:
+
+  * a **radix tree** keyed on whole-page token blocks: an edge holds the
+    ``page_size`` token ids whose K/V one arena page stores, so walking a
+    prompt block-by-block resolves the longest already-cached prefix in
+    O(prompt / page_size) exact-match steps,
+  * **partially-filled leaves**: a prompt whose length is not a page
+    multiple indexes its last page with a fill count; a later prompt that
+    diverges mid-page (or ends mid-page) reuses the *longest common
+    run* of that page as a copy-on-write source — the scheduler copies the
+    gathered K/V into a fresh page rather than aliasing, because the new
+    owner will keep writing into it,
+  * **LRU eviction**: every indexed node holds one allocator reference
+    (``PageAllocator.share``), so cached pages survive slot retirement.
+    Pages whose ONLY reader is the index (refcount 1) are reclaimable;
+    ``evict`` frees them leaves-first in least-recently-matched order.
+    Pages some slot still reads (refcount > 1) are pinned — eviction
+    skips them.
+
+The index never owns device state: it maps token chains to arena page ids;
+the scheduler acquires/releases allocator references and mirrors rows into
+the device page table.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class _Node:
+    """One radix edge: ``page_size`` (or fewer, for a partial leaf) token
+    ids and the arena page holding their K/V.  ``fill < page_size`` marks a
+    partial leaf — a chain cannot continue past a partial page, so partial
+    nodes never have children."""
+
+    __slots__ = ("tokens", "page", "fill", "children", "parent", "stamp")
+
+    def __init__(self, tokens, page, fill, parent):
+        self.tokens = tokens            # tuple[int, ...] (len == fill)
+        self.page = page                # arena page id (index holds 1 ref)
+        self.fill = fill                # valid token count in the page
+        self.children = {}              # token tuple -> _Node (full pages)
+        self.parent = parent
+        self.stamp = 0                  # LRU clock at last match/insert
+
+
+@dataclass
+class PrefixMatch:
+    """Longest cached prefix of one prompt.
+
+    ``pages``: arena pages covering whole-page matches, chain order — adopt
+    by reference (caller must ``share`` them).  ``partial``: optional
+    ``(page, n_tokens)`` copy-on-write source — the first ``n_tokens`` of
+    that page match the prompt beyond the full pages; the caller gathers
+    (never aliases) it.  ``matched_tokens`` is clipped to
+    ``len(prompt) - 1`` so at least one token always prefills (admission
+    needs the true last-token logits)."""
+    pages: list[int] = field(default_factory=list)
+    partial: tuple[int, int] | None = None
+
+    def matched_tokens(self, page_size: int) -> int:
+        return len(self.pages) * page_size + (
+            self.partial[1] if self.partial else 0)
+
+    def trim(self, page_size: int, n_tokens: int) -> "PrefixMatch":
+        """The same match restricted to its first ``n_tokens`` tokens (the
+        scheduler trims when the tail bucket cannot sit after the full
+        match).  A whole-page match that gets cut mid-page becomes the
+        partial CoW source for the cut."""
+        have = self.matched_tokens(page_size)
+        n = max(0, min(int(n_tokens), have))
+        n_full = n // page_size
+        rem = n - n_full * page_size
+        chain = list(self.pages) + (
+            [self.partial[0]] if self.partial else [])
+        out = PrefixMatch(pages=chain[:n_full])
+        if rem:
+            out.partial = (chain[n_full], rem)
+        return out
+
+
+class PrefixCache:
+    """The radix index + its eviction policy over one ``PageAllocator``."""
+
+    def __init__(self, allocator, page_size: int):
+        self.allocator = allocator
+        self.page_size = int(page_size)
+        self.root = _Node((), None, 0, None)
+        self._clock = 0
+        self.n_pages = 0                # pages currently indexed
+
+    # -- lookup --------------------------------------------------------------
+    def _tick(self, node: _Node) -> None:
+        self._clock += 1
+        node.stamp = self._clock
+
+    def match(self, prompt) -> PrefixMatch:
+        """Longest cached prefix of ``prompt`` (see :class:`PrefixMatch`).
+        Takes NO allocator references — the scheduler shares the pages it
+        actually adopts, immediately, before anything else can evict them."""
+        ps = self.page_size
+        limit = len(prompt) - 1          # ≥1 token must prefill for logits
+        out = PrefixMatch()
+        node, i = self.root, 0
+        while True:
+            remaining = limit - i
+            if remaining >= ps:
+                child = node.children.get(tuple(prompt[i:i + ps]))
+                if child is not None and child.fill == ps:
+                    out.pages.append(child.page)
+                    self._tick(child)
+                    node, i = child, i + ps
+                    continue
+            # no exact whole-page step: the best child shares a run of
+            # ``r < page_size`` leading tokens — a copy-on-write source
+            best, best_r = None, 0
+            want = tuple(prompt[i:i + min(remaining, ps)])
+            for child in node.children.values():
+                r = 0
+                for a, b in zip(child.tokens, want):
+                    if a != b:
+                        break
+                    r += 1
+                if r > best_r:
+                    best, best_r = child, r
+            if best is not None and best_r > 0:
+                out.partial = (best.page, best_r)
+                self._tick(best)
+            return out
+
+    # -- insertion -----------------------------------------------------------
+    def insert(self, prompt, page_ids) -> int:
+        """Index ``prompt``'s pages: ``page_ids[j]`` holds the K/V of
+        tokens ``[j*ps, (j+1)*ps)`` (last page may be partial).  Chains
+        already present are LRU-bumped, not re-referenced — dedup is what
+        keeps one physical page per distinct block.  Each NEWLY indexed
+        page takes one allocator reference (``share``); returns how many."""
+        ps = self.page_size
+        node, i, taken = self.root, 0, 0
+        plen = len(prompt)
+        for j, page in enumerate(page_ids):
+            fill = min(ps, plen - i)
+            if fill <= 0:
+                break
+            toks = tuple(prompt[i:i + fill])
+            if fill == ps:
+                child = node.children.get(toks)
+                if child is not None and child.fill == ps:
+                    self._tick(child)
+                    node, i = child, i + ps
+                    continue
+            else:
+                # partial leaf: skip when an existing sibling already
+                # covers these tokens (exact or longer run)
+                covered = any(
+                    c.fill >= fill and c.tokens[:fill] == toks
+                    for c in node.children.values())
+                if covered:
+                    break
+            child = _Node(toks, int(page), fill, node)
+            self.allocator.share([int(page)])
+            node.children[toks] = child
+            self._tick(child)
+            self.n_pages += 1
+            taken += 1
+            if fill < ps:
+                break                    # partial pages end the chain
+            node, i = child, i + ps
+        return taken
+
+    # -- eviction ------------------------------------------------------------
+    def _evictable(self, node: _Node) -> bool:
+        return (not node.children
+                and self.allocator.refcount(node.page) == 1)
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` cached pages, least-recently-matched
+        leaves first (an interior node becomes a leaf when its subtree
+        goes, so a cold chain unwinds tip-to-root).  Pages any slot still
+        reads (refcount > 1) are pinned and skipped.  Returns the number
+        of pages actually freed."""
+        freed = 0
+        while freed < n_pages:
+            victim = None
+            stack = [self.root]
+            while stack:
+                node = stack.pop()
+                stack.extend(node.children.values())
+                if node is self.root or not self._evictable(node):
+                    continue
+                if victim is None or node.stamp < victim.stamp:
+                    victim = node
+            if victim is None:
+                break
+            del victim.parent.children[victim.tokens]
+            self.allocator.free([victim.page])
+            self.n_pages -= 1
+            freed += 1
+        return freed
+
+    def clear(self) -> int:
+        """Drop every index reference (pages shared with live slots stay
+        alive through the slots' own references).  Returns pages whose
+        last reference this was."""
+        freed = 0
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            before = self.allocator.free_pages
+            self.allocator.free([node.page])
+            freed += self.allocator.free_pages - before
+        self.root.children.clear()
+        self.n_pages = 0
+        return freed

@@ -27,6 +27,13 @@ This module schedules instead:
   * one jitted ragged decode step (``engine.decode_step_ragged``) advances
     every occupied slot per iteration, whatever its age — no per-sequence
     recompilation, mixed positions in one call,
+  * prompt prefixes already resident in the page arena are SHARED
+    (``serving/prefix_cache.py``): admission matches the prompt against a
+    radix index of token-block chains, adopts matched pages by reference
+    (refcounted — ``PageAllocator.share``), and prefills only the
+    unmatched tail (``engine.prefill_extend``); the first divergent or
+    partially-filled page is copy-on-write.  Retired prompts stay indexed
+    (evictable, LRU) until page pressure reclaims them,
   * decode-time page growth is allocated just before each burst; on
     OOM-pages the latest-admitted request is PREEMPTED — its pages are
     recycled and it is requeued with prompt = original prompt + tokens so
@@ -51,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import engine, kv_cache
+from repro.serving.prefix_cache import PrefixCache
 
 # families whose prefill is position-local: a pad tail past the true
 # prompt cannot influence earlier positions, so it stays invisible behind
@@ -112,6 +120,9 @@ class Completion:
     finished_s: float = 0.0
     reason: str = ""         # "max_tokens" | "eos" | "cache_full" | "oom_pages"
     seq: int = 0             # admission order (preemption picks the latest)
+    ttft_s: float | None = None   # wall seconds offer -> first token (the
+    #                               headline metric prefix sharing moves);
+    #                               survives preemption (first admission's)
 
 
 class ContinuousBatchingEngine:
@@ -133,7 +144,8 @@ class ContinuousBatchingEngine:
                  memory_budget_bytes: int | None = None,
                  moe_impl: str = "dispatch", paged: bool | str = "auto",
                  page_size: int | None = None, pages: int | None = None,
-                 prefill_buckets="auto", avg_tokens_hint: int | None = None):
+                 prefill_buckets="auto", avg_tokens_hint: int | None = None,
+                 prefix_cache: bool | str = "auto"):
         cfg = model.cfg
         if cfg.family == "encdec":
             raise NotImplementedError(
@@ -193,6 +205,22 @@ class ContinuousBatchingEngine:
         self.buckets = self._resolve_buckets(prefill_buckets)
         self._moe_impl = moe_impl
 
+        # prefix sharing: radix index over the page arena ("auto" = on
+        # wherever exact tail prefill is possible — see _prefix_shareable)
+        self.prefix_cache: PrefixCache | None = None
+        shareable = self._prefix_shareable()
+        if prefix_cache == "auto":
+            prefix_cache = shareable
+        if prefix_cache:
+            if not shareable:
+                raise ValueError(
+                    f"prefix_cache=True: family {cfg.family!r} "
+                    f"(moe_impl {moe_impl!r}, paged {self.paged}) cannot "
+                    "share prefixes — ssm/hybrid carry recurrent prefill "
+                    "state and moe capacity dispatch couples tokens "
+                    "across the sequence; use prefix_cache='auto'")
+            self.prefix_cache = PrefixCache(self.allocator, self.page_size)
+
         # Sampling is fused INTO the jitted step/prefill: the sampler is a
         # softmax site (resolves through the config's SoftmaxPolicy) and
         # dispatching it eagerly costs more than the whole decode step at
@@ -208,8 +236,10 @@ class ContinuousBatchingEngine:
 
         self._step = jax.jit(_fused_decode)
         # prefill jits are cached per cache-allocation length (one compile
-        # per prompt bucket); see _prefill_fn.
+        # per prompt bucket); see _prefill_fn.  Tail prefills (prefix hits)
+        # cache per (allocation, tail-bucket) pair — see _extend_fn.
         self._prefill_fns: dict[int, object] = {}
+        self._extend_fns: dict[tuple, object] = {}
         self._prefill_shapes: set[tuple] = set()
         if self.paged:
             self._adopt = jax.jit(kv_cache.adopt_slot_paged)
@@ -225,13 +255,15 @@ class ContinuousBatchingEngine:
         self.next_tok = np.zeros((self.n_slots,), np.int64)
         self.pending: list[Request] = []
         self.completions: list[Completion] = []
-        self._carried: dict[int, tuple[int, list[int]]] = {}
+        self._carried: dict[int, tuple[int, list[int], float | None]] = {}
         self._admit_seq = 0
+        self._run_start: float | None = None
         # phase-separated throughput accounting (the satellite ask: a single
         # aggregate hides which phase the bandwidth argument is about)
         self.stats = dict(prefill_tokens=0, prefill_s=0.0, decode_tokens=0,
                           decode_s=0.0, steps=0, admitted=0, preempted=0,
-                          peak_pages=0)
+                          peak_pages=0, prefix_hits=0, prefix_tokens_reused=0,
+                          cow_copies=0, prefix_evictions=0)
 
     # -- prefill buckets -----------------------------------------------------
     def _resolve_buckets(self, prefill_buckets):
@@ -282,6 +314,84 @@ class ContinuousBatchingEngine:
             self._prefill_fns[alloc_len] = fn
         return fn
 
+    # -- prefix sharing ------------------------------------------------------
+    def _prefix_shareable(self) -> bool:
+        """Whether a prompt tail can prefill EXACTLY after cached prefix
+        pages.  Needs (a) a paged pool and (b) position-local prefill:
+        ssm/hybrid carry recurrent state through the prompt (a tail cannot
+        be replayed from K/V pages alone) and moe's capacity dispatch
+        sizes expert queues from the whole sequence (prefix tokens compete
+        with tail tokens for capacity, so splitting the prompt changes
+        which tokens drop).  dense/vlm always qualify; moe qualifies under
+        the per-token ``moe_impl="dense"`` path."""
+        if not self.paged:
+            return False
+        if self.cfg.family in ("dense", "vlm"):
+            return True
+        return self.cfg.family == "moe" and self._moe_impl == "dense"
+
+    def _extend_fn(self, alloc_len: int, tail_len: int):
+        """Jitted fused tail-prefill+sample for one (cache allocation,
+        padded tail) shape pair: gathers the matched prefix pages out of
+        the arena, prefills only the unmatched tail after them (traced
+        start position), samples at the true last token."""
+        key = (alloc_len, tail_len)
+        fn = self._extend_fns.get(key)
+        if fn is None:
+            cfg, tp, moe_impl = self.cfg, self.model.tp, self._moe_impl
+            temperature = self.temperature
+
+            def _fused_extend(params, kv, gather_row, tokens, start, key,
+                              last_idx):
+                logits, cache = engine.prefill_extend(
+                    params, tokens, kv, gather_row, start, cfg=cfg, tp=tp,
+                    moe_impl=moe_impl, last_pos=last_idx)
+                tok = engine.sample_token(logits, key, temperature, cfg=cfg,
+                                          vocab=cfg.vocab)
+                return tok.astype(jnp.int32), cache
+
+            fn = jax.jit(_fused_extend)
+            self._extend_fns[key] = fn
+        return fn
+
+    def _plan_prefix(self, prompt, alloc_len: int):
+        """Match ``prompt`` against the radix index and fit a padded tail
+        after it inside ``alloc_len``: the smallest tail bucket ``B`` such
+        that ``min(matched, alloc_len - B)`` matched tokens plus ``B``
+        tail positions cover the prompt (tail writes may never spill past
+        the allocation — they would wrap into matched pages).  A match is
+        trimmed when the winning bucket leaves room for only part of it.
+        Returns ``(match, matched_tokens, tail_bucket)`` or
+        ``(None, 0, 0)`` when nothing (usable) is cached."""
+        ps = self.page_size
+        match = self.prefix_cache.match(prompt)
+        m = match.matched_tokens(ps)
+        plen = len(prompt)
+        if m <= 0:
+            return None, 0, 0
+        if self.buckets is None:
+            return match, m, plen - m
+        for b in self.buckets:
+            use = min(m, alloc_len - b)
+            if use > 0 and plen - use <= b:
+                if use < m:
+                    match = match.trim(ps, use)
+                return match, use, b
+        return None, 0, 0
+
+    def _alloc_pages(self, n: int):
+        """``allocator.alloc`` with prefix-cache backpressure: on a miss,
+        evict least-recently-matched UNREFERENCED cached prefix pages
+        (refcount 1 — the index is their only reader) and retry.  Cached
+        pages a live slot shares stay pinned."""
+        ids = self.allocator.alloc(n)
+        if ids is None and self.prefix_cache is not None:
+            freed = self.prefix_cache.evict(n - self.allocator.free_pages)
+            if freed:
+                self.stats["prefix_evictions"] += freed
+                ids = self.allocator.alloc(n)
+        return ids
+
     # -- request intake ------------------------------------------------------
     def submit(self, req: Request) -> None:
         """Queue ``req``; requests that can NEVER be served are rejected
@@ -316,11 +426,14 @@ class ContinuousBatchingEngine:
     def _pages_for(self, tokens: int) -> int:
         return -(-int(tokens) // self.page_size)
 
-    def _page_row(self, slot: int) -> jnp.ndarray:
+    def _page_row(self, slot: int) -> np.ndarray:
+        # np, not jnp: jitted callees take host arrays through the C++
+        # dispatch fast path; an eager device_put per row costs more than
+        # the call it feeds
         row = np.full((self.pages_per_slot,), kv_cache.TRASH_PAGE, np.int32)
         ids = self.slot_pages[slot]
         row[:len(ids)] = ids
-        return jnp.asarray(row)
+        return row
 
     def _note_peak(self) -> None:
         used = self.allocator.usable_pages - self.allocator.free_pages
@@ -333,7 +446,7 @@ class ContinuousBatchingEngine:
         if self.paged:
             self.allocator.free(self.slot_pages[slot])
             self.slot_pages[slot] = []
-        self.pool = self._free(self.pool, jnp.int32(slot))
+        self.pool = self._free(self.pool, np.int32(slot))
 
     # -- admission: prefill into a free slot ---------------------------------
     def _admit(self, req: Request, slot: int, now: float) -> bool:
@@ -345,7 +458,11 @@ class ContinuousBatchingEngine:
                 f"request {req.rid}: prompt {plen} + "
                 f"{req.max_new_tokens} new tokens exceeds max_len "
                 f"{self.max_len}")
+        bucket = self._bucket_for(plen)
+        alloc_len = (_round_up(bucket, self.page_size) if self.paged
+                     else self.max_len)
         page_ids = None
+        match, m_tok, tail_bucket = None, 0, 0
         if self.paged:
             need = self._pages_for(plen)
             if need > self.allocator.usable_pages:
@@ -358,30 +475,72 @@ class ContinuousBatchingEngine:
                     f"request {req.rid}: prompt {plen} needs {need} pages; "
                     f"the pool has {self.allocator.usable_pages} "
                     f"(page_size {self.page_size})")
-            page_ids = self.allocator.alloc(need)
+            if self.prefix_cache is not None:
+                match, m_tok, tail_bucket = self._plan_prefix(req.prompt,
+                                                              alloc_len)
+            n_shared = len(match.pages) if match is not None else 0
+            if n_shared:
+                # take the slot's references FIRST: pins the matched pages
+                # against the eviction _alloc_pages may trigger below
+                self.allocator.share(match.pages)
+            page_ids = self._alloc_pages(need - n_shared)
             if page_ids is None:
+                if n_shared:
+                    self.allocator.free(match.pages)
                 return False
         t0 = time.perf_counter()
-        bucket = self._bucket_for(plen)
-        padded = np.zeros((1, bucket), np.int64)
-        padded[0, :plen] = req.prompt
-        prompt = jnp.asarray(padded, jnp.int32)
-        alloc_len = (_round_up(bucket, self.page_size) if self.paged
-                     else self.max_len)
         self.key, sub = jax.random.split(self.key)
-        tok, cache = self._prefill_fn(alloc_len)(
-            self.params, prompt, sub, jnp.int32(plen - 1))
-        self._prefill_shapes.add((bucket, alloc_len))
-        if self.paged:
-            self.slot_pages[slot] = page_ids
-            self.pool = self._adopt(self.pool, cache, jnp.int32(slot),
-                                    jnp.int32(plen), self._page_row(slot))
+        if m_tok > 0:
+            # prefix hit: adopt matched pages by reference, prefill only
+            # the unmatched tail after the gathered prefix K/V
+            n_shared = len(match.pages)
+            width = alloc_len // self.page_size
+            gather = np.full((width,), kv_cache.TRASH_PAGE, np.int32)
+            gather[:n_shared] = match.pages
+            if match.partial is not None:
+                gather[n_shared] = match.partial[0]
+            tail = np.zeros((1, tail_bucket), np.int32)
+            tail[0, :plen - m_tok] = req.prompt[m_tok:]
+            tok, cache = self._extend_fn(alloc_len, tail_bucket)(
+                self.params, self.pool["kv"], gather, tail,
+                np.int32(m_tok), sub, np.int32(plen - m_tok - 1))
+            self._prefill_shapes.add(("extend", tail_bucket, alloc_len))
+            self.slot_pages[slot] = list(match.pages) + page_ids
+            # CoW: the table row references shared + fresh pages, but the
+            # cache only ever COPIES into the fresh ones (shared entries of
+            # the copy row are the trash page)
+            copy = np.full((self.pages_per_slot,), kv_cache.TRASH_PAGE,
+                           np.int32)
+            copy[n_shared:self._pages_for(plen)] = page_ids
+            self.pool = self._adopt(self.pool, cache, np.int32(slot),
+                                    np.int32(plen), self._page_row(slot),
+                                    copy)
             self._note_peak()
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_reused"] += m_tok
+            if match.partial is not None:
+                self.stats["cow_copies"] += 1
         else:
-            self.pool = self._adopt(self.pool, cache, jnp.int32(slot),
-                                    jnp.int32(plen))
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :plen] = req.prompt
+            tok, cache = self._prefill_fn(alloc_len)(
+                self.params, padded, sub, np.int32(plen - 1))
+            self._prefill_shapes.add((bucket, alloc_len))
+            if self.paged:
+                self.slot_pages[slot] = page_ids
+                self.pool = self._adopt(self.pool, cache, np.int32(slot),
+                                        np.int32(plen),
+                                        self._page_row(slot))
+                self._note_peak()
+            else:
+                self.pool = self._adopt(self.pool, cache, np.int32(slot),
+                                        np.int32(plen))
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(
+                req.prompt, self.slot_pages[slot][:self._pages_for(plen)])
         tok = int(jax.block_until_ready(tok)[0])
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats["prefill_s"] += t1 - t0
         self.stats["prefill_tokens"] += plen
         self.stats["admitted"] += 1
         self._admit_seq += 1
@@ -389,6 +548,8 @@ class ContinuousBatchingEngine:
         comp = Completion(rid=req.rid, slot=slot, prompt_len=plen,
                           max_new_tokens=req.max_new_tokens, admitted_s=now,
                           seq=self._admit_seq)
+        comp.ttft_s = (max(0.0, t1 - self._run_start - req.arrival_s)
+                       if self._run_start is not None else t1 - t0)
         self.slot_owner[slot] = comp
         self.slot_req[slot] = req
         comp.tokens.append(tok)
@@ -409,10 +570,12 @@ class ContinuousBatchingEngine:
         """Fold tokens generated before a preemption back into the final
         completion (its prompt absorbed them while requeued)."""
         if comp.rid in self._carried:
-            orig_plen, prior = self._carried.pop(comp.rid)
+            orig_plen, prior, ttft = self._carried.pop(comp.rid)
             comp.tokens = prior + comp.tokens
             comp.max_new_tokens += len(prior)
             comp.prompt_len = orig_plen
+            if ttft is not None:
+                comp.ttft_s = ttft       # first admission's first token
 
     def _maybe_retire(self, slot: int, now: float) -> None:
         comp = self.slot_owner[slot]
@@ -432,12 +595,12 @@ class ContinuousBatchingEngine:
 
     # -- paged preemption ----------------------------------------------------
     def _finalize_oom(self, req: Request, now: float) -> None:
-        orig_plen, prior = self._carried.pop(req.rid,
-                                             (len(req.prompt), []))
+        orig_plen, prior, ttft = self._carried.pop(
+            req.rid, (len(req.prompt), [], None))
         self.completions.append(Completion(
             rid=req.rid, slot=-1, prompt_len=orig_plen,
             max_new_tokens=len(prior) + req.max_new_tokens, tokens=prior,
-            finished_s=now, reason="oom_pages"))
+            finished_s=now, reason="oom_pages", ttft_s=ttft))
 
     def _preempt(self, slot: int, now: float) -> None:
         """Evict ``slot`` to reclaim its pages: requeue the request with
@@ -445,9 +608,9 @@ class ContinuousBatchingEngine:
         readmission).  Pages AND the slot free immediately."""
         comp = self.slot_owner[slot]
         req = self.slot_req[slot]
-        orig_plen, prior = self._carried.get(comp.rid,
-                                             (comp.prompt_len, []))
-        self._carried[comp.rid] = (orig_plen, prior + comp.tokens)
+        orig_plen, prior, ttft = self._carried.get(
+            comp.rid, (comp.prompt_len, [], comp.ttft_s))
+        self._carried[comp.rid] = (orig_plen, prior + comp.tokens, ttft)
         remaining = comp.max_new_tokens - len(comp.tokens)
         self.pending.insert(0, Request(
             rid=comp.rid, prompt=tuple(req.prompt) + tuple(comp.tokens),
@@ -483,6 +646,15 @@ class ContinuousBatchingEngine:
                            len(self.slot_pages[slot]))
 
             h = max(1, runahead)
+            # page pressure reclaims cold cached prefixes BEFORE the
+            # horizon shrinks or anyone is preempted: an unreferenced
+            # index page is strictly cheaper to give up than live work
+            short = (sum(extra(s, h) for s in active)
+                     - self.allocator.free_pages)
+            if short > 0 and self.prefix_cache is not None:
+                freed = self.prefix_cache.evict(short)
+                if freed:
+                    self.stats["prefix_evictions"] += freed
             while h > 1 and (sum(extra(s, h) for s in active)
                              > self.allocator.free_pages):
                 h -= 1
@@ -492,7 +664,7 @@ class ContinuousBatchingEngine:
                     n = extra(s, h)
                     if n:
                         self.slot_pages[s].extend(self.allocator.alloc(n))
-                        self.pool = self._set_row(self.pool, jnp.int32(s),
+                        self.pool = self._set_row(self.pool, np.int32(s),
                                                   self._page_row(s))
                 self._note_peak()
                 return h
@@ -585,6 +757,7 @@ class ContinuousBatchingEngine:
             for req in self.pending:
                 req.arrival_s = 0.0
         start = time.perf_counter()
+        self._run_start = start
         while self.pending or self.active_slots():
             now = (time.perf_counter() - start) if use_wall_clock else 0.0
             progressed = self.step(now=now)
@@ -624,5 +797,12 @@ class ContinuousBatchingEngine:
             out.update(page_size=self.page_size,
                        pages=self.allocator.usable_pages,
                        peak_pages=st["peak_pages"],
-                       preempted=st["preempted"])
+                       preempted=st["preempted"],
+                       prefix_cache=self.prefix_cache is not None)
+            if self.prefix_cache is not None:
+                out.update(prefix_hits=st["prefix_hits"],
+                           prefix_tokens_reused=st["prefix_tokens_reused"],
+                           cow_copies=st["cow_copies"],
+                           prefix_evictions=st["prefix_evictions"],
+                           cached_pages=self.prefix_cache.n_pages)
         return out

@@ -222,7 +222,9 @@ class TestPagedScheduler:
         comps = eng.run([Request(rid=1, prompt=(1, 2, 3),
                                  max_new_tokens=2)])
         assert [c.rid for c in comps] == [1]
-        assert eng.allocator.free_pages == eng.allocator.usable_pages
+        # all pages back except those the prefix index retains (evictable)
+        assert (eng.allocator.free_pages + eng.prefix_cache.n_pages
+                == eng.allocator.usable_pages)
 
     def test_eos_on_first_decoded_token_frees_pages_immediately(self):
         probe = ContinuousBatchingEngine(self.m, self.params, slots=1,
@@ -237,7 +239,10 @@ class TestPagedScheduler:
                                 max_new_tokens=4)])[0]
         assert comp.reason == "eos" and len(comp.tokens) == 1
         assert eng.stats["steps"] == 0           # retired from prefill
-        assert eng.allocator.free_pages == eng.allocator.usable_pages
+        # the slot's references dropped; only the prefix index still holds
+        # the prompt's page (refcount 1 = evictable, not leaked)
+        assert (eng.allocator.free_pages + eng.prefix_cache.n_pages
+                == eng.allocator.usable_pages)
         assert int(eng.pool["lengths"][comp.slot]) == 0
         assert (eng.pool["page_table"][comp.slot].tolist()
                 == [kv_cache.TRASH_PAGE] * eng.pages_per_slot)
@@ -276,7 +281,8 @@ class TestPagedScheduler:
         for c in comps:
             assert c.reason == "max_tokens" and len(c.tokens) == 20
             assert c.prompt_len == 8             # carried tokens folded back
-        assert eng.allocator.free_pages == eng.allocator.usable_pages
+        assert (eng.allocator.free_pages + eng.prefix_cache.n_pages
+                == eng.allocator.usable_pages)
         # preemption must not change WHAT is generated (recompute path)
         ref = ContinuousBatchingEngine(self.m, self.params, slots=2,
                                        max_len=32, seed=2, page_size=8,

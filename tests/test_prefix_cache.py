@@ -1,0 +1,327 @@
+"""Prefix sharing tests: PageAllocator refcounts (share / double-free
+guard), the radix index (match / insert / clip / LRU eviction / pinning),
+and the scheduler integration — greedy token parity shared-vs-unshared
+across dense + mla archs, CoW on divergent and partially-filled pages,
+preemption that must not free shared pages, eviction of unreferenced
+cached prefixes under page pressure, and the ssm/hybrid/moe-dispatch
+bypass (families whose prefill is not position-local cannot share)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.serving import kv_cache
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Allocator refcounts.
+# ---------------------------------------------------------------------------
+class TestAllocatorRefcounts:
+    def test_alloc_share_free_lifecycle(self):
+        alloc = kv_cache.PageAllocator(5)
+        ids = alloc.alloc(2)
+        assert all(alloc.refcount(p) == 1 for p in ids)
+        alloc.share(ids)                         # second reader
+        assert all(alloc.refcount(p) == 2 for p in ids)
+        alloc.free(ids)                          # first reader leaves...
+        assert alloc.free_pages == 2             # ...pages NOT recycled
+        alloc.free(ids)                          # last reader leaves
+        assert alloc.free_pages == 4
+        assert all(alloc.refcount(p) == 0 for p in ids)
+
+    def test_double_free_guard(self):
+        alloc = kv_cache.PageAllocator(4)
+        (p,) = alloc.alloc(1)
+        alloc.free([p])
+        with pytest.raises(AssertionError, match="double free"):
+            alloc.free([p])
+
+    def test_share_of_free_page_is_use_after_free(self):
+        alloc = kv_cache.PageAllocator(4)
+        (p,) = alloc.alloc(1)
+        alloc.free([p])
+        with pytest.raises(AssertionError, match="free page"):
+            alloc.share([p])
+
+    def test_alloc_all_or_nothing_preserved(self):
+        alloc = kv_cache.PageAllocator(4)
+        assert alloc.alloc(100) is None
+        assert alloc.free_pages == 3
+
+
+# ---------------------------------------------------------------------------
+# Radix index (no scheduler, no device state: token chains -> page ids).
+# ---------------------------------------------------------------------------
+class TestRadixIndex:
+    def _cache(self, pages=16, ps=4):
+        alloc = kv_cache.PageAllocator(pages)
+        return alloc, PrefixCache(alloc, ps)
+
+    def test_match_walks_whole_page_chain_and_clips(self):
+        alloc, pc = self._cache()
+        prompt = tuple(range(10, 22))            # 12 tokens, 3 pages of 4
+        ids = alloc.alloc(3)
+        assert pc.insert(prompt, ids) == 3
+        # identical prompt: the last token must still prefill, so the clip
+        # cuts the final page down to a 3-token CoW source
+        m = pc.match(prompt)
+        assert m.pages == ids[:2]
+        assert m.partial == (ids[2], 3)
+        assert m.matched_tokens(4) == 11
+        # longer prompt with the same prefix: all 3 pages by reference
+        m2 = pc.match(prompt + (99, 98))
+        assert m2.pages == ids and m2.partial is None
+
+    def test_divergent_page_is_cow_source_not_reference(self):
+        alloc, pc = self._cache()
+        prompt = (1, 2, 3, 4, 5, 6, 7, 8)
+        ids = alloc.alloc(2)
+        pc.insert(prompt, ids)
+        m = pc.match((1, 2, 3, 4, 5, 6, 99, 98, 97))
+        assert m.pages == [ids[0]]               # first page exact
+        assert m.partial == (ids[1], 2)          # (5, 6) of the second
+        # no shared run at all -> clean miss
+        assert pc.match((7, 7, 7, 7, 7)).matched_tokens(4) == 0
+
+    def test_insert_dedups_existing_chain(self):
+        alloc, pc = self._cache()
+        prompt = tuple(range(8))
+        ids = alloc.alloc(2)
+        assert pc.insert(prompt, ids) == 2
+        dup = alloc.alloc(2)
+        assert pc.insert(prompt, dup) == 0       # chain known: no new refs
+        assert pc.n_pages == 2
+        assert alloc.refcount(dup[0]) == 1       # caller still sole owner
+
+    def test_partial_match_trim(self):
+        alloc, pc = self._cache()
+        ids = alloc.alloc(2)
+        pc.insert(tuple(range(8)), ids)
+        m = pc.match(tuple(range(8)) + (50,))
+        t = m.trim(4, 6)                         # cut mid-second-page
+        assert t.pages == [ids[0]] and t.partial == (ids[1], 2)
+        assert t.matched_tokens(4) == 6
+
+    def test_lru_eviction_frees_cold_leaves_and_skips_pinned(self):
+        alloc, pc = self._cache(pages=16, ps=4)
+        cold = alloc.alloc(1)
+        hot = alloc.alloc(1)
+        pinned = alloc.alloc(1)
+        pc.insert((1, 1, 1, 1), cold)
+        pc.insert((2, 2, 2, 2), hot)
+        pc.insert((3, 3, 3, 3), pinned)
+        alloc.free(cold + hot + pinned)          # index holds the only refs
+        alloc.share(pinned)                      # ...except a live reader
+        pc.match((2, 2, 2, 2, 9))                # LRU-bump "hot"
+        assert pc.evict(1) == 1                  # takes the coldest leaf
+        assert alloc.refcount(cold[0]) == 0
+        assert pc.evict(5) == 1                  # "hot" goes, pinned stays
+        assert alloc.refcount(pinned[0]) == 2
+        assert pc.n_pages == 1
+
+    def test_chain_unwinds_tip_to_root(self):
+        alloc, pc = self._cache()
+        prompt = tuple(range(12))
+        ids = alloc.alloc(3)
+        pc.insert(prompt, ids)
+        alloc.free(ids)
+        assert pc.evict(3) == 3                  # interior pages become
+        assert pc.n_pages == 0                   # leaves as tips go
+        assert alloc.free_pages == alloc.usable_pages
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration.
+# ---------------------------------------------------------------------------
+def _serve(model, params, reqs, *, prefix_cache, slots=2, max_len=64,
+           page_size=8, pages=None, **kw):
+    eng = ContinuousBatchingEngine(
+        model, params, slots=slots, max_len=max_len, temperature=0.0,
+        page_size=page_size, pages=pages, prefix_cache=prefix_cache, **kw)
+    comps = eng.run(list(reqs))
+    return eng, [tuple(c.tokens) for c in comps]
+
+
+class TestSchedulerPrefixSharing:
+    def setup_method(self, _):
+        self.m = build_model("qwen2.5-14b", reduced=True)
+        self.params = self.m.init(KEY)
+
+    def _reqs(self, prefix, n=4, tail=3, max_new=6):
+        return [Request(rid=i,
+                        prompt=prefix + tuple(100 + i * 10 + j
+                                              for j in range(tail)),
+                        max_new_tokens=max_new) for i in range(n)]
+
+    def test_token_parity_and_counters_dense(self):
+        prefix = tuple(range(5, 5 + 16))         # 2 whole pages at ps=8
+        reqs = self._reqs(prefix)
+        _, off = _serve(self.m, self.params, reqs, prefix_cache=False)
+        eng, on = _serve(self.m, self.params, reqs, prefix_cache=True)
+        assert on == off                         # greedy tokens identical
+        th = eng.throughput()
+        assert th["prefix_hits"] == 3            # all but the first request
+        assert th["prefix_tokens_reused"] == 3 * 16
+        assert eng.stats["prefill_tokens"] == sum(len(r.prompt)
+                                                  for r in reqs)
+
+    @pytest.mark.slow
+    def test_token_parity_mla(self):
+        # deepseek = MLA latent pages; family "moe", so exact tail prefill
+        # needs the per-token dense dispatch (capacity dispatch couples
+        # prefix and tail tokens through the expert queues)
+        m = build_model("deepseek-v2-lite-16b", reduced=True)
+        params = m.init(KEY)
+        prefix = tuple(range(7, 7 + 16))
+        reqs = self._reqs(prefix, n=3, tail=1, max_new=4)
+        _, off = _serve(m, params, reqs, prefix_cache=False,
+                        moe_impl="dense")
+        eng, on = _serve(m, params, reqs, prefix_cache=True,
+                         moe_impl="dense")
+        assert on == off
+        assert eng.throughput()["prefix_hits"] == 2
+
+    def test_cow_on_partially_filled_last_page(self):
+        base = tuple(range(9, 9 + 12))           # page full + page fill 4
+        reqs = [Request(rid=0, prompt=base, max_new_tokens=4),
+                Request(rid=1, prompt=base + tuple(range(60, 68)),
+                        max_new_tokens=4)]
+        _, off = _serve(self.m, self.params, reqs, prefix_cache=False)
+        eng, on = _serve(self.m, self.params, reqs, prefix_cache=True)
+        assert on == off
+        th = eng.throughput()
+        assert th["cow_copies"] == 1             # the 4-token partial page
+        assert th["prefix_tokens_reused"] == 12  # 8 by ref + 4 copied
+        # the donor's partial page was gathered, never aliased: rid=1's
+        # table row may not contain a page another slot keeps writing
+        assert th["prefix_hits"] == 1
+
+    def test_cow_on_divergent_page(self):
+        reqs = [Request(rid=0, prompt=(1, 2, 3, 4, 5, 6, 7, 8),
+                        max_new_tokens=4),
+                Request(rid=1, prompt=(1, 2, 3, 4, 99, 98, 97, 96, 95),
+                        max_new_tokens=4)]
+        _, off = _serve(self.m, self.params, reqs, prefix_cache=False)
+        eng, on = _serve(self.m, self.params, reqs, prefix_cache=True)
+        assert on == off
+        th = eng.throughput()
+        assert th["cow_copies"] == 1
+        assert th["prefix_tokens_reused"] == 4   # the shared (1,2,3,4) run
+
+    def test_preempt_keeps_shared_pages_frees_unique(self):
+        eng = ContinuousBatchingEngine(
+            self.m, self.params, slots=2, max_len=64, temperature=0.0,
+            page_size=8, prefix_cache=True, eos_token=-1)  # 1-step bursts
+        prefix = tuple(range(1, 9))              # one whole shared page
+        eng.submit(Request(rid=0, prompt=prefix, max_new_tokens=8))
+        eng.submit(Request(rid=1, prompt=prefix + (70,), max_new_tokens=8))
+        eng.step()                               # admits both, still active
+        s1 = next(s for s in eng.active_slots()
+                  if eng.slot_owner[s].rid == 1)
+        shared = eng.slot_pages[s1][0]           # rid 0's prompt page
+        unique = list(eng.slot_pages[s1][1:])
+        assert shared in eng.slot_pages[
+            next(s for s in eng.active_slots()
+                 if eng.slot_owner[s].rid == 0)]
+        # readers: rid 0's slot + rid 1's slot + the index
+        assert eng.allocator.refcount(shared) == 3
+        eng._preempt(s1, 0.0)
+        # the shared page survives (other readers); the slot's references
+        # on its unique pages drop — what remains is at most the index's
+        # own (evictable) reference, never a reader that pins them
+        assert eng.allocator.refcount(shared) == 2
+        assert all(eng.allocator.refcount(p) <= 1 for p in unique)
+        assert eng.stats["preempted"] == 1
+        eng.run([])                              # requeued rid 1 completes
+        assert sorted(c.rid for c in eng.completions) == [0, 1]
+
+    def test_preemption_parity_with_sharing(self):
+        # the preemption scenario of test_paged, but with requests that
+        # actually share their prompt: recompute-on-readmission must
+        # produce the same stream whether or not pages were shared
+        reqs = lambda: [Request(rid=i, prompt=tuple(range(1, 9)),
+                                max_new_tokens=20) for i in range(2)]
+        eng, on = _serve(self.m, self.params, reqs(), prefix_cache=True,
+                         max_len=32, pages=7, seed=2)
+        assert eng.stats["preempted"] >= 1
+        _, off = _serve(self.m, self.params, reqs(), prefix_cache=False,
+                        max_len=32, seed=2)
+        assert on == off
+
+    def test_eviction_of_unreferenced_prefix_under_pressure(self):
+        eng = ContinuousBatchingEngine(
+            self.m, self.params, slots=2, max_len=64, temperature=0.0,
+            page_size=8, pages=5, prefix_cache=True)
+        eng.run([Request(rid=0, prompt=tuple(range(1, 9)),
+                         max_new_tokens=2)])
+        assert eng.prefix_cache.n_pages == 1     # rid 0 retired but cached
+        assert eng.prefix_cache.match(
+            tuple(range(1, 9)) + (9,)).pages != []
+        # a 25-token prompt needs all 4 usable pages: the cold cached
+        # prefix must be evicted, not the admission refused
+        eng.run([Request(rid=1, prompt=tuple(range(30, 55)),
+                         max_new_tokens=2)])
+        assert sorted(c.rid for c in eng.completions) == [0, 1]
+        assert eng.stats["prefix_evictions"] >= 1
+        assert eng.prefix_cache.match(
+            tuple(range(1, 9)) + (9,)).pages == []
+
+    def test_no_prefix_cache_flag_off(self):
+        eng, _ = _serve(self.m, self.params,
+                        self._reqs(tuple(range(16)), n=2),
+                        prefix_cache=False)
+        assert eng.prefix_cache is None
+        th = eng.throughput()
+        assert th["prefix_cache"] is False and "prefix_hits" not in th
+
+
+class TestFamilyBypass:
+    """ssm/hybrid prefill carries recurrent state and moe's capacity
+    dispatch couples tokens across the sequence: those paths must BYPASS
+    the prefix index (auto-off), and asking for it explicitly is an
+    error, not a silent no-op."""
+
+    def test_hybrid_bypasses(self):
+        m = build_model("hymba-1.5b", reduced=True)
+        eng = ContinuousBatchingEngine(m, None, slots=2, max_len=32,
+                                       page_size=8)
+        assert eng.paged and eng.prefix_cache is None
+        with pytest.raises(ValueError, match="cannot share prefixes"):
+            ContinuousBatchingEngine(m, None, slots=2, max_len=32,
+                                     page_size=8, prefix_cache=True)
+
+    def test_ssm_bypasses(self):
+        m = build_model("rwkv6-1.6b", reduced=True)
+        eng = ContinuousBatchingEngine(m, None, slots=2, max_len=32)
+        assert not eng.paged and eng.prefix_cache is None
+        with pytest.raises(ValueError, match="cannot share prefixes"):
+            ContinuousBatchingEngine(m, None, slots=2, max_len=32,
+                                     prefix_cache=True)
+
+    def test_moe_capacity_dispatch_bypasses(self):
+        m = build_model("deepseek-v2-lite-16b", reduced=True)
+        eng = ContinuousBatchingEngine(m, None, slots=2, max_len=32,
+                                       page_size=8)   # moe_impl="dispatch"
+        assert eng.paged and eng.prefix_cache is None
+        with pytest.raises(ValueError, match="cannot share prefixes"):
+            ContinuousBatchingEngine(m, None, slots=2, max_len=32,
+                                     page_size=8, prefix_cache=True)
+        # the per-token dense path is exact and shares
+        eng = ContinuousBatchingEngine(m, None, slots=2, max_len=32,
+                                       page_size=8, moe_impl="dense")
+        assert eng.prefix_cache is not None
+
+    @pytest.mark.slow
+    def test_hybrid_serves_with_bypass(self):
+        m = build_model("hymba-1.5b", reduced=True)
+        params = m.init(KEY)
+        eng = ContinuousBatchingEngine(m, params, slots=2, max_len=32,
+                                       temperature=0.0, page_size=8)
+        comps = eng.run([Request(rid=i, prompt=(1, 2, 3, 4),
+                                 max_new_tokens=3) for i in range(2)])
+        assert len(comps) == 2 and eng.prefix_cache is None
