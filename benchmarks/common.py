@@ -69,6 +69,14 @@ def emit(rows: list[tuple], header=("name", "us_per_call", "derived")):
     return rows
 
 
+def json_payload(benchmarks: dict, mode: str) -> dict:
+    """The check_bench.py metrics schema, shared by every ``--json``
+    emitter.  ``devices`` lets the gate skip sharded-lane rows when the
+    runner has a single device (no sharded lane could have run)."""
+    return dict(schema=1, mode=mode, backend=jax.default_backend(),
+                devices=jax.device_count(), benchmarks=benchmarks)
+
+
 # Array sizes (f32 elements): spanning L1/L2/L3/DRAM like the paper's sweep.
 SIZES = [2 ** k for k in range(10, 24, 2)]        # 1K .. 8M elements
 OUT_OF_CACHE = 8 * 2 ** 20                        # 8M f32 = 32 MB

@@ -119,14 +119,9 @@ def main() -> None:
         if args.json and rows:
             metrics[name] = {r[0]: _as_number(r[1]) for r in rows}
     if args.json:
-        import jax
-
-        payload = dict(
-            schema=1,
-            mode="smoke" if args.smoke else ("fast" if args.fast else
-                                             "full"),
-            backend=jax.default_backend(),
-            benchmarks=metrics)
+        payload = common.json_payload(
+            metrics,
+            "smoke" if args.smoke else ("fast" if args.fast else "full"))
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)

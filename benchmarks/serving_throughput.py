@@ -147,6 +147,56 @@ def _ttft_us(completions, q):
     return float(np.percentile(tt, q)) * 1e6 if tt else 0.0
 
 
+def _sharded_lane(model, params, base, page_size, vocab, seed):
+    """Tensor-parallel serving lane (CI acceptance for sharded serving):
+    the same greedy workload served on one device and on a
+    ('data', 'model') mesh over every visible device — arena KV heads
+    sharded over ``model`` per ``sharding.pool_specs``, params TP, page
+    tables replicated.  Greedy token parity is a hard assert (the (m, n)
+    combine makes per-shard partial attention exact, so sharding must not
+    change a single token).  Returns [] when the runner has one device or
+    the KV heads don't split (the bench gate skips the rows then — see
+    scripts/check_bench.py)."""
+    import math
+
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    n_dev = jax.device_count()
+    tp = math.gcd(model.cfg.n_kv_heads, n_dev)
+    if n_dev < 2 or tp < 2:
+        return []
+    mesh = make_mesh((n_dev // tp, tp), ("data", "model"))
+
+    n, slots, max_new, prompt_len = 4, 2, 6, 8
+    max_len = 6 * page_size
+
+    def serve(mesh2):
+        eng = model.serving_engine(
+            params, slots=slots, max_len=max_len, seed=seed, paged=True,
+            page_size=page_size, temperature=0.0, mesh=mesh2)
+        reqs = _requests(n, prompt_len, max_new, None, vocab, seed=seed)
+        th = _measure(eng, reqs, prompt_len)
+        return th, [tuple(c.tokens) for c in eng.completions]
+
+    sth0, toks0 = serve(None)
+    sth1, toks1 = serve(mesh)
+    if toks1 != toks0:
+        raise RuntimeError(
+            "sharded serving diverged from single-device greedy tokens: "
+            f"{toks1} != {toks0}")
+    ratio = sth1["decode_tok_s"] / max(sth0["decode_tok_s"], 1e-9)
+    return [
+        (f"{base}/sharded_decode", round(1e6 / max(
+            sth1["decode_tok_s"], 1e-9), 2),
+         f"{sth1['decode_tok_s']:.1f}tok/s mesh {n_dev // tp}x{tp} "
+         "(tokens == single-device)"),
+        (f"{base}/sharded_vs_single_tok_s", round(ratio, 3),
+         f"{ratio:.2f}x decode tok/s over {n_dev} host devices"),
+    ]
+
+
 def _prefix_lane(model, params, base, page_size, vocab, seed):
     """Shared-prefix serving lane: 6 greedy requests whose prompts share a
     4-page prefix (distinct one-page tails), served twice at IDENTICAL
@@ -302,6 +352,8 @@ def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
     if paged_ok and cfg.family in ("dense", "vlm"):
         rows.extend(_prefix_lane(model, params, f"serving/{arch}",
                                  page_size, vocab, seed))
+        rows.extend(_sharded_lane(model, params, f"serving/{arch}",
+                                  page_size, vocab, seed))
     return emit(rows)
 
 
@@ -319,17 +371,31 @@ def main(argv=None) -> None:
     p.add_argument("--max-new", type=int, default=24)
     p.add_argument("--arrival-rate", type=float, default=None,
                    help="Poisson arrivals per second (default: all at t=0)")
+    p.add_argument("--json", default=None, metavar="OUT",
+                   help="also write the metrics as check_bench.py JSON "
+                        "(the serving-sharded CI lane gates on this)")
     args = p.parse_args(argv)
     if args.smoke:
-        run(arch=args.arch, n_requests=6, slots_list=(4,), prompt_len=8,
-            max_new=8, max_len=64, kernel_lane=True)
-        return
-    slots = (tuple(int(s) for s in args.slots.split(","))
-             if args.slots else (1, 4, 8))
-    run(arch=args.arch, n_requests=args.requests, slots_list=slots,
-        prompt_len=args.prompt_len, max_new=args.max_new,
-        max_len=2 * (args.prompt_len + args.max_new),
-        arrival_rate=args.arrival_rate)
+        rows = run(arch=args.arch, n_requests=6, slots_list=(4,),
+                   prompt_len=8, max_new=8, max_len=64, kernel_lane=True)
+    else:
+        slots = (tuple(int(s) for s in args.slots.split(","))
+                 if args.slots else (1, 4, 8))
+        rows = run(arch=args.arch, n_requests=args.requests,
+                   slots_list=slots, prompt_len=args.prompt_len,
+                   max_new=args.max_new,
+                   max_len=2 * (args.prompt_len + args.max_new),
+                   arrival_rate=args.arrival_rate)
+    if args.json:
+        import json
+
+        from benchmarks import common
+
+        payload = common.json_payload(
+            {"serving_throughput": {r[0]: float(r[1]) for r in rows}},
+            "smoke" if args.smoke else "full")
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

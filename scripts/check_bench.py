@@ -41,7 +41,13 @@ per-metric absolute comparison):
   * a metric present in the baseline but MISSING from the current run
     fails — a benchmark silently disappearing is exactly the rot the
     smoke job exists to catch.  Intentional renames/removals refresh the
-    baseline (docs/serving.md "Refreshing BENCH_baseline.json").
+    baseline (docs/serving.md "Refreshing BENCH_baseline.json").  Two
+    scoped exceptions: ``--benches GROUP[,GROUP]`` limits the gate to
+    those groups (the serving-sharded lane gates only its own
+    serving_throughput JSON), and baseline rows containing ``sharded``
+    are skipped with a note when the current payload reports
+    ``devices <= 1`` — the sharded lane can only run on a multi-device
+    runner, so its absence there is expected, not rot.
 
 CI wiring: the ``bench-smoke`` job runs this after two ``benchmarks.run
 --smoke --json`` passes; apply the ``bench-regression-ok`` PR label to
@@ -86,7 +92,7 @@ def _merge(runs: list[dict], pick) -> dict:
         out["benchmarks"][bench] = {
             name: (vs[0] if _is_bookkeeping(name, vs[0]) else pick(name, vs))
             for name, vs in rows.items()}
-    for k in ("schema", "mode", "backend"):
+    for k in ("schema", "mode", "backend", "devices"):
         if runs and k in runs[0]:
             out[k] = runs[0][k]
     return out
@@ -161,12 +167,19 @@ def calibration(baseline: dict, current: dict, min_us: float) -> float:
 
 
 def compare(baseline: dict, current: dict, *, threshold: float,
-            min_us: float) -> tuple[list[str], list[str], float]:
-    """Returns (failures, notes, calibration_factor)."""
+            min_us: float, benches=None
+            ) -> tuple[list[str], list[str], float]:
+    """Returns (failures, notes, calibration_factor).  ``benches`` (a set
+    of group names) scopes the gate to those groups — the serving-sharded
+    CI lane gates its own serving_throughput JSON without owning rows for
+    every other benchmark module."""
     cal = calibration(baseline, current, min_us)
     spreads = baseline.get("spreads", {})
+    devices = int(current.get("devices", 1) or 1)
     failures, notes = [], []
     for bench, base_rows in sorted(baseline.get("benchmarks", {}).items()):
+        if benches is not None and bench not in benches:
+            continue
         cur_rows = current.get("benchmarks", {}).get(bench)
         if cur_rows is None:
             failures.append(f"{bench}: benchmark missing from current run")
@@ -177,6 +190,15 @@ def compare(baseline: dict, current: dict, *, threshold: float,
                 continue
             cur = cur_rows.get(name)
             if cur is None:
+                # sharded-lane rows only exist on multi-device runners
+                # (XLA_FLAGS=--xla_force_host_platform_device_count in the
+                # serving-sharded CI lane); a 1-device run skipping them is
+                # expected, not rot.
+                if "sharded" in name and devices <= 1:
+                    notes.append(
+                        f"{bench}: {name} skipped (current run reports "
+                        f"{devices} device(s); sharded lane cannot run)")
+                    continue
                 failures.append(f"{bench}: metric {name!r} missing")
                 continue
             if not isinstance(cur, (int, float)):
@@ -229,6 +251,10 @@ def main(argv=None) -> int:
     p.add_argument("--min-us", type=float, default=100.0,
                    help="time metrics under this many us never fail "
                         "(sub-noise at smoke scale; default 100)")
+    p.add_argument("--benches", default=None,
+                   help="comma list of benchmark groups to gate (default: "
+                        "all groups in the baseline); the serving-sharded "
+                        "CI lane passes --benches serving_throughput")
     p.add_argument("--refresh-baseline", action="store_true",
                    help="write BASELINE as the per-metric MEDIAN of the "
                         "given runs instead of gating (run the smoke 3x "
@@ -256,9 +282,10 @@ def main(argv=None) -> int:
         print(f"warning: comparing mode={baseline.get('mode')} baseline "
               f"against mode={current.get('mode')} run", file=sys.stderr)
 
-    failures, notes, cal = compare(baseline, current,
-                                   threshold=args.threshold,
-                                   min_us=args.min_us)
+    benches = set(args.benches.split(",")) if args.benches else None
+    failures, notes, cal = compare(
+        baseline, current, threshold=args.threshold, min_us=args.min_us,
+        benches=benches)
     if cal > 1.5:
         print(f"warning: machine-speed calibration {cal:.2f}x vs the "
               "baseline run — uniform slowdowns this large are invisible "
@@ -275,10 +302,13 @@ def main(argv=None) -> int:
         print("\nIf intentional: refresh the baseline (docs/serving.md) or "
               "apply the 'bench-regression-ok' PR label.")
         return 1
-    n_metrics = sum(len(v) for v in baseline.get("benchmarks", {}).values())
-    print(f"benchmark gate OK ({n_metrics} baseline metrics, threshold "
-          f"{args.threshold:.0%}, floor {args.min_us:g}us, calibration "
-          f"{cal:.2f}x, best of {len(runs)} run(s))")
+    n_metrics = sum(len(v) for k, v in
+                    baseline.get("benchmarks", {}).items()
+                    if benches is None or k in benches)
+    scope = f" in {args.benches}" if benches else ""
+    print(f"benchmark gate OK ({n_metrics} baseline metrics{scope}, "
+          f"threshold {args.threshold:.0%}, floor {args.min_us:g}us, "
+          f"calibration {cal:.2f}x, best of {len(runs)} run(s))")
     return 0
 
 

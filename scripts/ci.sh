@@ -7,13 +7,48 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Sharded serving lane (`scripts/ci.sh sharded`): the multi-device CI
+# job.  Forces 4 fake CPU devices so the tensor-parallel paged decode
+# path (mesh-sharded KV arena, shard_map'd kernels) runs for real, then
+# gates the sharded throughput rows against BENCH_baseline.json.  Kept
+# in this script — not inlined in ci.yml — so `./scripts/ci.sh sharded`
+# reproduces the CI job byte-for-byte on a laptop.
+if [ "${1:-}" = "sharded" ]; then
+    shift
+    export XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}"
+    if ! python -c "import repro" 2>/dev/null; then
+        echo "error: 'import repro' failed — PYTHONPATH=src not effective?" >&2
+        exit 1
+    fi
+    # Same 0-collected guard as the fast lane, scoped to the sharded
+    # suite: a typo'd test path would otherwise make this job green
+    # while testing nothing.
+    collected=$(python -m pytest tests/test_sharded_serving.py --co -q 2>/dev/null | grep -c '::' || true)
+    if [ "${collected}" -eq 0 ]; then
+        echo "error: collected 0 sharded-serving tests" >&2
+        exit 1
+    fi
+    echo "collected ${collected} sharded-serving tests"
+    python -m pytest -q tests/test_sharded_serving.py "$@"
+    # Sharded smoke twice (the gate takes best-of-2, same protocol as the
+    # bench-smoke job); --benches scopes the gate to serving_throughput —
+    # the other baseline groups were not re-measured in this run.
+    python -m benchmarks.serving_throughput --smoke --json bench-sharded-1.json
+    python -m benchmarks.serving_throughput --smoke --json bench-sharded-2.json
+    exec python scripts/check_bench.py --benches serving_throughput \
+        BENCH_baseline.json bench-sharded-1.json bench-sharded-2.json
+fi
+
 # Lint + format check (config in pyproject.toml).  CI installs ruff;
 # locally we skip with a warning rather than fail on envs that only have
 # jax+pytest.  The format check is a HARD failure (flipped in ISSUE 5, as
-# deferred from PR 4); the dev container still ships no ruff binary, so
-# if the first ruff-equipped CI run reports drift, run the one-time
-# `ruff format .` there and commit — or export RUFF_FORMAT_ADVISORY=1 to
-# downgrade the failure to a warning while that lands.
+# deferred from PR 4).  ISSUE 7 asked for the one-time `ruff format .`
+# pass, but the dev container STILL ships no ruff binary (verified again
+# this PR: no `ruff` on PATH, no `python -m ruff`), so the pass cannot
+# run here — it must happen on the first ruff-equipped CI runner that
+# reports drift: run `ruff format .` there and commit, or export
+# RUFF_FORMAT_ADVISORY=1 to downgrade the failure to a warning while
+# that lands.
 if command -v ruff >/dev/null 2>&1; then
     ruff check .
     if [ "${RUFF_FORMAT_ADVISORY:-0}" = "1" ]; then

@@ -88,10 +88,13 @@ class SoftmaxPolicy:
     def resolve_blocks(self, op: str, rows: int, cols: int,
                        dtype=jnp.float32, *,
                        block_rows: Optional[int] = None,
-                       block_cols: Optional[int] = None) -> tuple[int, int]:
+                       block_cols: Optional[int] = None,
+                       shards: int = 1) -> tuple[int, int]:
         """Registry resolution: explicit args > this policy's overrides >
         (autotune cache) > heuristic.  Attention ops take the policy's
-        ``attn_block_q``/``attn_block_k`` rather than the softmax tile."""
+        ``attn_block_q``/``attn_block_k`` rather than the softmax tile.
+        ``shards`` keys tensor-parallel variants separately (the per-shard
+        grid sees fewer heads)."""
         from repro.kernels import registry  # lazy: kernels are optional
 
         pbr, pbc = self._overrides_for(op)
@@ -99,7 +102,8 @@ class SoftmaxPolicy:
             op, rows, cols, dtype,
             block_rows=block_rows if block_rows is not None else pbr,
             block_cols=block_cols if block_cols is not None else pbc,
-            use_cache=self.autotune, cache_file=self.autotune_cache)
+            use_cache=self.autotune, cache_file=self.autotune_cache,
+            shards=shards)
 
     def tune(self, op: str, rows: int, cols: int, dtype=jnp.float32, **kw):
         """Eagerly autotune one (op, shape) and persist it to this policy's

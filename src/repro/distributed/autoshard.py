@@ -35,6 +35,14 @@ def enabled() -> bool:
     return _MESH is not None
 
 
+def active_mesh():
+    """The mesh of the enclosing :func:`hints` context (None outside one).
+
+    Lets leaf code (kernel dispatch) discover the serving mesh at TRACE
+    time without threading it through every call signature."""
+    return _MESH
+
+
 def hint(x, *axes):
     """Constrain ``x``: axes entries are 'dp', 'tp', or None per dim."""
     if _MESH is None or x is None:

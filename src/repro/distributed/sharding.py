@@ -205,6 +205,94 @@ def cache_specs(cache_tree, cfg: ModelConfig, mesh,
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def kv_shard_factor(cfg: ModelConfig, mesh) -> int:
+    """How many shards the serving KV arena splits into across ``model``.
+
+    Tensor-parallel serving shards the arena's KV-head axis, so each device
+    stores ``n_kv_heads / tp`` heads of EVERY page: a per-shard byte budget
+    buys ``factor`` times the global arena.  1 when the heads don't divide
+    the model axis, and for MLA (the latent arena is head-shared and stays
+    replicated — MLA's TP lives in the ``wkv_b`` up-projection)."""
+    tp = _tp(mesh)
+    if cfg.mla is not None or tp <= 1 or cfg.n_kv_heads % tp:
+        return 1
+    return tp
+
+
+def pool_specs(pool_tree, cfg: ModelConfig, mesh):
+    """Serving-pool sharding rules (``kv_cache.init_paged_pool`` /
+    ``init_slot_pool`` state) — the paged-arena extension of the
+    ``cache_specs``/``batch_specs`` rule tables.
+
+      * page arenas ``[L, P, ps, Hkv, hd]`` (and strip leaves
+        ``[L, S, T, Hkv, hd]``): KV-HEAD axis (dim 3) over ``model`` when
+        divisible — each shard owns ``Hkv/tp`` heads of every page, and the
+        (m, n) online accumulation makes the per-head partial attention
+        exact under any shard-local sweep order,
+      * MLA latent arenas ``[L, P, ps, rank]``: replicated over ``model``
+        (the latent is head-shared; MLA TP shards the ``wkv_b``
+        up-projection instead),
+      * hybrid's ssm state ``[L, S, ...]`` and strip slot axes: slots over
+        the data axes when divisible (slot/data-parallel),
+      * ``page_table`` / ``lengths``: replicated — admission mutates them
+        host-side, and every shard needs the whole table to gather its own
+        heads of each page.
+
+    Works on concrete arrays or ShapeDtypeStructs (only ``.shape`` is
+    read).  The strip-vs-paged distinction is inferred from the presence of
+    ``page_table`` in the tree: a paged arena's dim 1 is the shared page
+    axis (never sharded over data — pages are shared across slots), a
+    strip pool's dim 1 is the slot axis.
+    """
+    dp = _fsdp(mesh)
+    dp_n = _axes_size(mesh, dp)
+    tp = _tp(mesh)
+    kv_tp = "model" if (tp > 1 and cfg.n_kv_heads % tp == 0) else None
+    paged = isinstance(pool_tree, dict) and "page_table" in pool_tree
+
+    def spec_for(path_str: str, leaf) -> P:
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        if not path_str.startswith("kv"):            # page_table / lengths
+            return P(*parts)
+        if path_str.endswith(("/k", "/v")) and nd == 5:
+            parts[3] = kv_tp                         # KV-head axis
+            if not paged and leaf.shape[1] % dp_n == 0:
+                parts[1] = dp                        # strip slot axis
+            return P(*parts)
+        if path_str.endswith("ssm") and nd >= 2:     # slot-major state
+            if leaf.shape[1] % dp_n == 0:
+                parts[1] = dp
+            return P(*parts)
+        return P(*parts)                             # MLA c/kr: replicated
+
+    flat = jax.tree_util.tree_flatten_with_path(pool_tree)[0]
+    paths = ["/".join(str(getattr(k, "key", k)) for k in kp)
+             for kp, _ in flat]
+    specs = [spec_for(p, leaf) for p, (_, leaf) in zip(paths, flat)]
+    treedef = jax.tree_util.tree_structure(pool_tree)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def prefill_cache_specs(cache_tree, cfg: ModelConfig, mesh):
+    """Sharding for a batch=1 prefill cache (``kv_cache.init_cache``
+    layout ``[L, B, S, Hkv, hd]``) so admission's output lands head-sharded
+    the way ``adopt_slot_paged`` scatters it into the (head-sharded) arena:
+    KV-head axis over ``model`` for 5-D attention leaves, everything else
+    (MLA latents, ssm state, cross-kv) replicated."""
+    tp = _tp(mesh)
+    kv_tp = "model" if (tp > 1 and cfg.n_kv_heads % tp == 0) else None
+
+    def spec_for(leaf) -> P:
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        if nd == 5 and leaf.shape[3] == cfg.n_kv_heads:
+            parts[3] = kv_tp
+        return P(*parts)
+
+    return jax.tree.map(spec_for, cache_tree)
+
+
 def named(tree_specs, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -31,6 +31,13 @@ here when the :class:`SoftmaxPolicy` says ``use_kernels`` (interpret mode
 on CPU) and fall back to the jnp (m, n) chunked forms otherwise — the jnp
 forms remain the reference these kernels are tested against
 (``tests/test_decode_kernels.py``).
+
+Tensor-parallel serving: heads are independent (the grid's Hkv axis never
+communicates), so under a serving mesh ``ops`` wraps these kernels in
+``shard_map`` with the head axis over ``model`` — each shard's grid sees
+its LOCAL ``Hkv / tp`` head count (taken from ``q.shape``, so nothing
+here changes), and the per-shard variant autotunes under its own
+``shards=tp`` registry key.
 """
 
 from __future__ import annotations

@@ -17,6 +17,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.softmax_api import SoftmaxAlgorithm
 from repro.kernels import decode_attention as _da
@@ -31,16 +33,37 @@ _round_up = registry.round_up
 
 
 def _blocks(op: str, rows: int, cols: int, dtype, block_rows, block_cols,
-            policy=None) -> tuple[int, int]:
+            policy=None, shards: int = 1) -> tuple[int, int]:
     """Resolve block shapes: explicit args win, then the policy's overrides
-    and cache setting, then the registry model."""
+    and cache setting, then the registry model.  ``shards`` keys the
+    tensor-parallel variant of the op (per-shard grids tune separately)."""
     if policy is not None:
         return policy.resolve_blocks(op, rows, cols, dtype,
                                      block_rows=block_rows,
-                                     block_cols=block_cols)
+                                     block_cols=block_cols, shards=shards)
     return registry.block_shapes(op, rows, cols, dtype,
                                  block_rows=block_rows,
-                                 block_cols=block_cols)
+                                 block_cols=block_cols, shards=shards)
+
+
+def _decode_shards(hkv: int):
+    """(n_shards, mesh) when an active :func:`autoshard.hints` mesh
+    tensor-parallel-shards this decode op's KV heads; (1, None) otherwise.
+
+    Inside the serving scheduler's mesh context the pool arenas are laid
+    out with the KV-head axis over ``model`` (``sharding.pool_specs``); the
+    Pallas decode kernels then run under ``shard_map`` so each shard's grid
+    sees its LOCAL ``Hkv / tp`` heads — heads are independent in decode
+    attention, so the mapped kernel needs no collectives."""
+    from repro.distributed import autoshard  # lazy: kernels ↛ distributed
+
+    mesh = autoshard.active_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return 1, None
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if tp <= 1 or hkv % tp:
+        return 1, None
+    return tp, mesh
 
 
 def _as_rows(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
@@ -395,15 +418,23 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     as chunk lengths for the unrolled (m, n) loop, capped by
     ``MAX_SLOT_CHUNKS``/``MAX_T_CHUNKS``.
     """
-    s, _, _, d = q.shape
+    s, hkv, _, d = q.shape
     t = k.shape[2]
+    kernel = _kernel_path(policy, use_kernel)
+    shards, mesh = _decode_shards(hkv) if kernel else (1, None)
     bs, bt = _blocks("decode_attention", s, t, q.dtype, block_s, block_t,
-                     policy)
+                     policy, shards=shards)
     if scale is None:
         scale = 1.0 / (d ** 0.5)
-    if _kernel_path(policy, use_kernel):
-        return _da.decode_attention_pallas(q, k, v, lengths, scale=scale,
-                                           window=window, block_t=bt)
+    if kernel:
+        fn = functools.partial(_da.decode_attention_pallas, scale=scale,
+                               window=window, block_t=bt)
+        if shards > 1:
+            # Head axis (dim 1 of q/k/v) over model; lengths replicated.
+            hs = P(None, "model", None, None)
+            fn = shard_map(fn, mesh=mesh, in_specs=(hs, hs, hs, P(None)),
+                           out_specs=hs, check_rep=False)
+        return fn(q, k, v, lengths)
     return _decode_attention_chunked(
         q, k, v, lengths, scale=scale, window=window,
         n_s_chunks=min(MAX_SLOT_CHUNKS, -(-s // bs)),
@@ -441,19 +472,33 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
     ``decode_attention.MAX_PAGES_PER_TILE``); the jnp fallback gathers
     whole page chunks via ``jnp.take`` into the shared (m, n) sweep.
     """
-    s, _, _, d = q.shape
+    s, hkv, _, d = q.shape
     ps = k_pages.shape[1]
     pmax = page_table.shape[1]
     t = pmax * ps
+    kernel = _kernel_path(policy, use_kernel)
+    shards, mesh = _decode_shards(hkv) if kernel else (1, None)
     bs, bt = _blocks("decode_attention_paged", s, t, q.dtype, block_s,
-                     block_t, policy)
+                     block_t, policy, shards=shards)
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     pages_per_chunk = max(1, bt // ps)
-    if _kernel_path(policy, use_kernel):
-        return _da.decode_attention_paged_pallas(
-            q, k_pages, v_pages, page_table, lengths, scale=scale,
-            window=window, pages_per_tile=pages_per_chunk)
+    if kernel:
+        fn = functools.partial(_da.decode_attention_paged_pallas,
+                               scale=scale, window=window,
+                               pages_per_tile=pages_per_chunk)
+        if shards > 1:
+            # q heads (dim 1) and arena heads (dim 2 of [P, ps, Hkv, D])
+            # over model; the table and lengths replicated so every shard
+            # gathers its own heads of each page.
+            fn = shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(None, "model", None, None),
+                          P(None, None, "model", None),
+                          P(None, None, "model", None),
+                          P(None, None), P(None)),
+                out_specs=P(None, "model", None, None), check_rep=False)
+        return fn(q, k_pages, v_pages, page_table, lengths)
     return _decode_attention_paged_chunked(
         q, k_pages, v_pages, page_table, lengths, scale=scale, window=window,
         n_s_chunks=min(MAX_SLOT_CHUNKS, -(-s // bs)),

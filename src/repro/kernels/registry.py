@@ -119,9 +119,16 @@ def _bucket(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
 
 
-def cache_key(op: str, rows: int, cols: int, dtype, backend: str) -> str:
-    return "|".join((op, f"r{_bucket(rows)}", f"c{_bucket(cols)}",
-                     str(jax.numpy.dtype(dtype)), backend))
+def cache_key(op: str, rows: int, cols: int, dtype, backend: str,
+              shards: int = 1) -> str:
+    """Bucketed tuning key.  ``shards`` is the tensor-parallel head-shard
+    count the op runs under (shard_map over the serving mesh): a per-shard
+    grid sees ``Hkv/shards`` heads, so its best tile differs from the
+    unsharded one.  ``shards=1`` keeps the historical key format — existing
+    cache files stay valid."""
+    key = "|".join((op, f"r{_bucket(rows)}", f"c{_bucket(cols)}",
+                    str(jax.numpy.dtype(dtype)), backend))
+    return key if shards <= 1 else f"{key}|s{shards}"
 
 
 def load_cache(path: str | None = None, *, force: bool = False) -> dict:
@@ -152,10 +159,10 @@ def save_cache(path: str | None = None) -> str:
 def record_tuned(op: str, rows: int, cols: int, dtype,
                  blocks: tuple[int, int], *, backend: str | None = None,
                  meta: dict | None = None, path: str | None = None,
-                 persist: bool = True) -> str:
+                 persist: bool = True, shards: int = 1) -> str:
     """Stores a tuned block shape; returns the cache key."""
     backend = backend or jax.default_backend()
-    key = cache_key(op, rows, cols, dtype, backend)
+    key = cache_key(op, rows, cols, dtype, backend, shards)
     p = cache_path(path)
     load_cache(p)
     with _cache_lock:
@@ -167,10 +174,11 @@ def record_tuned(op: str, rows: int, cols: int, dtype,
 
 
 def lookup_tuned(op: str, rows: int, cols: int, dtype,
-                 *, backend: str | None = None,
-                 path: str | None = None) -> Optional[tuple[int, int]]:
+                 *, backend: str | None = None, path: str | None = None,
+                 shards: int = 1) -> Optional[tuple[int, int]]:
     backend = backend or jax.default_backend()
-    entry = load_cache(path).get(cache_key(op, rows, cols, dtype, backend))
+    entry = load_cache(path).get(
+        cache_key(op, rows, cols, dtype, backend, shards))
     if entry is None:
         return None
     return int(entry["block_rows"]), int(entry["block_cols"])
@@ -182,7 +190,8 @@ def lookup_tuned(op: str, rows: int, cols: int, dtype,
 def block_shapes(op: str, rows: int, cols: int, dtype=jax.numpy.float32, *,
                  block_rows: int | None = None, block_cols: int | None = None,
                  use_cache: bool = False, backend: str | None = None,
-                 cache_file: str | None = None) -> tuple[int, int]:
+                 cache_file: str | None = None,
+                 shards: int = 1) -> tuple[int, int]:
     """The canonical block-shape model (every former heuristic collapsed).
 
     Explicit ``block_rows``/``block_cols`` win (per-axis); otherwise, with
@@ -198,7 +207,7 @@ def block_shapes(op: str, rows: int, cols: int, dtype=jax.numpy.float32, *,
     tuned = None
     if use_cache and (block_rows is None or block_cols is None):
         tuned = lookup_tuned(op, rows, cols, dtype, backend=backend,
-                             path=cache_file)
+                             path=cache_file, shards=shards)
         if tuned is not None:
             # Clamp to the candidate envelope AND this shape's own padded
             # width — a pow-2 bucket neighbor must not inherit a tile wider

@@ -23,6 +23,16 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(shape: tuple[int, int] | None = None):
+    """('data', 'model') mesh for the sharded serving path.
+
+    Default puts every visible device on the model axis (pure
+    tensor-parallel KV-head sharding); pass ``shape=(data, model)`` to
+    split off a data/slot-parallel axis."""
+    return jax.make_mesh(shape or (1, jax.device_count()),
+                         ("data", "model"))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes gradients are reduced over (everything that is not 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")

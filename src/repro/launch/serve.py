@@ -49,6 +49,11 @@ def main():
                    help="max new tokens per request")
     p.add_argument("--temperature", type=float, default=1.0)
     p.add_argument("--softmax", default="two_pass")
+    p.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                   help="serve sharded over a ('data', 'model') device "
+                        "mesh, e.g. --mesh 2x4: KV heads of every arena "
+                        "page tensor-parallel over 'model', params TP, "
+                        "page tables replicated (docs/serving.md)")
     args = p.parse_args()
 
     import numpy as np
@@ -57,7 +62,21 @@ def main():
 
     from repro.models import build_model
 
-    model = build_model(args.arch, reduced=args.reduced,
+    mesh = None
+    tp = 1
+    if args.mesh is not None:
+        from repro.launch.mesh import make_serving_mesh
+
+        try:
+            d, m = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            p.error("--mesh wants DATAxMODEL, e.g. 2x4")
+        mesh = make_serving_mesh((d, m))
+        tp = m
+        print(f"mesh: {d}x{m} over {jax.device_count()} devices "
+              f"(axes data={d}, model={m})")
+
+    model = build_model(args.arch, tp=tp, reduced=args.reduced,
                         softmax_algorithm=args.softmax)
     cfg = model.cfg
     params = model.init(jax.random.PRNGKey(0))
@@ -93,7 +112,8 @@ def main():
             temperature=args.temperature, seed=2,
             paged=False if args.strip else "auto",
             page_size=args.page_size, pages=args.pages,
-            prefix_cache=False if args.no_prefix_cache else "auto")
+            prefix_cache=False if args.no_prefix_cache else "auto",
+            mesh=mesh)
         rng = np.random.default_rng(0)
         arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                               args.requests))
@@ -116,6 +136,10 @@ def main():
               f"{args.slots} slots / {pool} ({st['steps']} ragged decode "
               f"steps, {st['admitted']} admissions, "
               f"{len(eng._prefill_shapes)} prefill bucket compiles)")
+        if mesh is not None:
+            tpd = eng.throughput()
+            print(f"sharded: mesh {tpd['mesh_axes']}, kv arena split "
+                  f"{tpd['kv_shards']}x over 'model'")
         if eng.prefix_cache is not None:
             print(f"prefix cache: {st['prefix_hits']} hits, "
                   f"{st['prefix_tokens_reused']} prompt tok adopted by "

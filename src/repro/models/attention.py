@@ -285,9 +285,12 @@ def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
         # position-addressed (no ring), so SWA is a mask, not addressing.
         assert cache is not None and s == 1 and xkv is None
         assert ring_valid is None, "ring caches are not slot-addressable"
-        if seq_par:
-            raise NotImplementedError(
-                "decode_seq_parallel does not compose with ragged decode")
+        # seq-par ragged: shard the cache POSITION axis (pages / T) over
+        # ``model`` instead of the heads — every shard holds all Hkv heads
+        # of its position chunk, and the (m, n) partial-attention combine
+        # keeps each slot's softmax exact across position shards.
+        pos_tp = "tp" if seq_par else None
+        hd_tp = None if seq_par else "tp"
         from repro.kernels import ops as kernel_ops  # lazy: kernels optional
 
         if page_table is not None:
@@ -303,38 +306,38 @@ def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
             off = wpos % ps
             ck = cache["k"].at[pg, off].set(k[:, 0].astype(cache["k"].dtype))
             cv = cache["v"].at[pg, off].set(v[:, 0].astype(cache["v"].dtype))
-            kk = hint(ck, None, None, "tp", None)
-            vv = hint(cv, None, None, "tp", None)
+            kk = hint(ck, pos_tp, None, hd_tp, None)
+            vv = hint(cv, pos_tp, None, hd_tp, None)
             if grouped:
                 qg = hint(q[:, 0].reshape(b, hkv, hq // hkv, hd),
-                          "dp", "tp", None, None)
+                          "dp", hd_tp, None, None)
             else:                                  # kv expanded per q-head
                 kk = kk[:, :, head_to_kv]
                 vv = vv[:, :, head_to_kv]
-                qg = hint(q[:, 0][:, :, None], "dp", "tp", None, None)
+                qg = hint(q[:, 0][:, :, None], "dp", hd_tp, None, None)
             o = kernel_ops.decode_attention_paged(
                 qg, kk, vv, page_table, wpos + 1, scale=hd ** -0.5,
                 window=window, policy=cfg.softmax_policy())
-            o = hint(o.reshape(b, 1, hq * hd), "dp", None, "tp")
+            o = hint(o.reshape(b, 1, hq * hd), "dp", None, hd_tp)
             return layers.dense(p["wo"], o), {"k": ck, "v": cv}
 
         wpos = jnp.minimum(cache_positions.astype(jnp.int32),
                            cache["k"].shape[1] - 1)
         ck = _update_rows_at(cache["k"], k, wpos)
         cv = _update_rows_at(cache["v"], v, wpos)
-        kk = hint(ck.transpose(0, 2, 1, 3), "dp", "tp", None, None)
-        vv = hint(cv.transpose(0, 2, 1, 3), "dp", "tp", None, None)
+        kk = hint(ck.transpose(0, 2, 1, 3), "dp", hd_tp, pos_tp, None)
+        vv = hint(cv.transpose(0, 2, 1, 3), "dp", hd_tp, pos_tp, None)
         if grouped:
             qg = hint(q[:, 0].reshape(b, hkv, hq // hkv, hd),
-                      "dp", "tp", None, None)
+                      "dp", hd_tp, None, None)
         else:                                      # kv expanded per q-head
             kk = kk[:, head_to_kv]
             vv = vv[:, head_to_kv]
-            qg = hint(q[:, 0][:, :, None], "dp", "tp", None, None)
+            qg = hint(q[:, 0][:, :, None], "dp", hd_tp, None, None)
         o = kernel_ops.decode_attention(
             qg, kk, vv, wpos + 1, scale=hd ** -0.5, window=window,
             policy=cfg.softmax_policy())
-        o = hint(o.reshape(b, 1, hq * hd), "dp", None, "tp")
+        o = hint(o.reshape(b, 1, hq * hd), "dp", None, hd_tp)
         return layers.dense(p["wo"], o), {"k": ck, "v": cv}
 
     new_cache = None

@@ -8,6 +8,14 @@ masking) — the step the request scheduler (serving/scheduler.py) drives.
 The layer loop is a ``lax.scan`` over (stacked params, stacked cache).
 Sampling is a softmax site: it resolves through the config's SoftmaxPolicy
 (algorithm + kernel switch).
+
+Nothing here is mesh-specific, and that is deliberate: sharded serving is
+orchestrated one level up.  The scheduler jits these fns with
+``out_shardings`` from ``distributed.sharding.pool_specs`` (arena KV-head
+axis over ``model``) and CALLS them inside ``autoshard.hints(mesh)``, so
+the activation hints in ``models/attention.py``'s ragged branch — and the
+``shard_map`` kernel dispatch in ``kernels.ops`` — bake into the traced
+step.  On a single device the same code traces with every hint a no-op.
 """
 
 from __future__ import annotations

@@ -182,7 +182,7 @@ def pages_per_slot(max_len: int, page_size: int) -> int:
 
 def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
                     *, page_size: int | None = None,
-                    pages: int | None = None) -> dict:
+                    pages: int | None = None, mesh=None) -> dict:
     """A paged KV pool: shared page arena + per-slot page table.
 
     Returns ``{"kv": <stacked-layer page arenas>, "page_table":
@@ -194,6 +194,11 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
     then bounded by total tokens in flight, the point of paging.  Table
     entries init to the trash page; ``lengths`` semantics match the strip
     pool (:func:`init_slot_pool`).
+
+    ``mesh`` (a ('data', 'model') serving mesh) lays the pool out sharded
+    per :func:`repro.distributed.sharding.pool_specs`: arena KV-head axis
+    over ``model``, page table / lengths replicated (see
+    :func:`shard_pool`).
     """
     if not supports_paging(cfg):
         raise ValueError(f"family {cfg.family!r} has no pageable cache")
@@ -219,9 +224,21 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
     else:                                          # dense / moe / vlm
         kv = {"k": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt),
               "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt)}
-    return {"kv": kv,
+    pool = {"kv": kv,
             "page_table": jnp.zeros((slots, n_tab), jnp.int32),
             "lengths": jnp.zeros((slots,), jnp.int32)}
+    return shard_pool(pool, cfg, mesh) if mesh is not None else pool
+
+
+def shard_pool(pool: dict, cfg: ModelConfig, mesh) -> dict:
+    """Lay a serving pool (paged or strip) out across ``mesh`` per
+    :func:`repro.distributed.sharding.pool_specs` — KV-head axis of the
+    arenas over ``model``, slot/ssm axes over the data axes, page table
+    and lengths replicated.  Idempotent on already-placed pools."""
+    from repro.distributed import sharding as _sh  # lazy: serving↛distributed
+
+    return jax.device_put(pool, _sh.named(_sh.pool_specs(pool, cfg, mesh),
+                                          mesh))
 
 
 def _copy_pages(dst, src, page_row):

@@ -50,13 +50,17 @@ jit-threaded pytree.
 
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.distributed import autoshard
+from repro.distributed import sharding as dist_sharding
 from repro.serving import engine, kv_cache
 from repro.serving.prefix_cache import PrefixCache
 
@@ -72,6 +76,17 @@ _BUCKETABLE_FAMILIES = ("dense", "vlm")
 
 def _round_up(x: int, mult: int) -> int:
     return -(-int(x) // int(mult)) * int(mult)
+
+
+def _pin_cache(cache, cfg, mesh):
+    """Constrain a fresh batch=1 prefill cache to the arena's head-sharded
+    layout (``sharding.prefill_cache_specs``) so admission's page copy
+    into the (head-sharded) pool is shard-local, not an all-gather."""
+    if mesh is None:
+        return cache
+    sh = dist_sharding.named(
+        dist_sharding.prefill_cache_specs(cache, cfg, mesh), mesh)
+    return jax.tree.map(jax.lax.with_sharding_constraint, cache, sh)
 
 
 @dataclass
@@ -136,6 +151,17 @@ class ContinuousBatchingEngine:
     ``avg_tokens_hint`` tokens per request (default ``max_len // 2``) —
     the oversubscription that lets a paged pool serve more concurrent
     requests than strips at the same byte budget.
+
+    ``mesh`` (a ('data', 'model') mesh, see ``launch.make_serving_mesh``)
+    runs the whole device path SHARDED: params tensor-parallel
+    (``param_specs(fsdp=False)``), the pool per ``sharding.pool_specs``
+    (arena KV heads over ``model``), every jitted fn pinned with
+    ``out_shardings`` so the layout survives each step.  Admission and
+    scheduling stay host-side and unchanged — page tables and lengths are
+    replicated.  ``memory_budget_bytes`` is interpreted PER SHARD: with
+    the KV heads split ``tp`` ways the same per-device budget buys
+    ``kv_shard_factor``x the pages.  A 1-device mesh degenerates to the
+    unsharded path (same layouts, trivial placements).
     """
 
     def __init__(self, model, params, *, slots: int | None = None,
@@ -145,8 +171,9 @@ class ContinuousBatchingEngine:
                  moe_impl: str = "dispatch", paged: bool | str = "auto",
                  page_size: int | None = None, pages: int | None = None,
                  prefill_buckets="auto", avg_tokens_hint: int | None = None,
-                 prefix_cache: bool | str = "auto"):
+                 prefix_cache: bool | str = "auto", mesh=None):
         cfg = model.cfg
+        self.mesh = mesh
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "continuous batching does not cover the encoder-decoder "
@@ -163,6 +190,12 @@ class ContinuousBatchingEngine:
         if slots is None:
             if memory_budget_bytes is None:
                 raise ValueError("pass slots= or memory_budget_bytes=")
+            if mesh is not None:
+                # the budget is per-shard bytes: head-sharded arenas store
+                # 1/tp of every page per device, so the global pool the
+                # same per-device bytes can back is tp x larger
+                memory_budget_bytes *= dist_sharding.kv_shard_factor(cfg,
+                                                                     mesh)
             if self.paged:
                 slots, pages = kv_cache.paged_dims_in_budget(
                     cfg, max_len, memory_budget_bytes, model.tp,
@@ -181,6 +214,12 @@ class ContinuousBatchingEngine:
                         f"of max_len {max_len}")
         self.model = model
         self.cfg = cfg
+        if mesh is not None:
+            # serving params: TP over ``model``, replicated over data (no
+            # FSDP — read-only weights would all-gather every step)
+            params = jax.device_put(params, dist_sharding.named(
+                dist_sharding.param_specs(params, cfg, mesh, fsdp=False),
+                mesh))
         self.params = params
         self.n_slots = int(slots)
         self.temperature = temperature
@@ -194,13 +233,15 @@ class ContinuousBatchingEngine:
                 pages = 1 + self.n_slots * self.pages_per_slot
             self.pool = kv_cache.init_paged_pool(
                 cfg, self.n_slots, self.max_len, model.tp,
-                page_size=self.page_size, pages=int(pages))
+                page_size=self.page_size, pages=int(pages), mesh=mesh)
             self.allocator = kv_cache.PageAllocator(int(pages))
             self.slot_pages: list[list[int]] = [[] for _ in
                                                 range(self.n_slots)]
         else:
             self.pool = kv_cache.init_slot_pool(cfg, self.n_slots,
                                                 self.max_len, model.tp)
+            if mesh is not None:
+                self.pool = kv_cache.shard_pool(self.pool, cfg, mesh)
 
         self.buckets = self._resolve_buckets(prefill_buckets)
         self._moe_impl = moe_impl
@@ -234,20 +275,38 @@ class ContinuousBatchingEngine:
                                       vocab=cfg.vocab)
             return tok.astype(jnp.int32), new_pool, key
 
-        self._step = jax.jit(_fused_decode)
+        # Pool-returning jits are pinned with ``out_shardings`` under a
+        # mesh: the arena layout must survive every step or XLA would be
+        # free to re-lay the pool out (resharding the whole arena) per
+        # call.  Tokens/keys are tiny and stay replicated.
+        if mesh is not None:
+            pool_sh = dist_sharding.named(
+                dist_sharding.pool_specs(self.pool, cfg, mesh), mesh)
+            rep = NamedSharding(mesh, PartitionSpec())
+            self._step = self._with_mesh(jax.jit(
+                _fused_decode, out_shardings=(rep, pool_sh, rep)))
+        else:
+            pool_sh = None
+            self._step = jax.jit(_fused_decode)
         # prefill jits are cached per cache-allocation length (one compile
         # per prompt bucket); see _prefill_fn.  Tail prefills (prefix hits)
         # cache per (allocation, tail-bucket) pair — see _extend_fn.
         self._prefill_fns: dict[int, object] = {}
         self._extend_fns: dict[tuple, object] = {}
         self._prefill_shapes: set[tuple] = set()
+        pool_kw = {} if pool_sh is None else dict(out_shardings=pool_sh)
         if self.paged:
-            self._adopt = jax.jit(kv_cache.adopt_slot_paged)
-            self._free = jax.jit(kv_cache.free_slot_paged)
-            self._set_row = jax.jit(kv_cache.set_page_row)
+            self._adopt = self._with_mesh(
+                jax.jit(kv_cache.adopt_slot_paged, **pool_kw))
+            self._free = self._with_mesh(
+                jax.jit(kv_cache.free_slot_paged, **pool_kw))
+            self._set_row = self._with_mesh(
+                jax.jit(kv_cache.set_page_row, **pool_kw))
         else:
-            self._adopt = jax.jit(kv_cache.adopt_slot)
-            self._free = jax.jit(kv_cache.free_slot)
+            self._adopt = self._with_mesh(
+                jax.jit(kv_cache.adopt_slot, **pool_kw))
+            self._free = self._with_mesh(
+                jax.jit(kv_cache.free_slot, **pool_kw))
 
         # host-side authoritative state
         self.slot_owner: list[Completion | None] = [None] * self.n_slots
@@ -264,6 +323,23 @@ class ContinuousBatchingEngine:
                           decode_s=0.0, steps=0, admitted=0, preempted=0,
                           peak_pages=0, prefix_hits=0, prefix_tokens_reused=0,
                           cow_copies=0, prefix_evictions=0)
+
+    # -- mesh plumbing -------------------------------------------------------
+    def _with_mesh(self, fn):
+        """Run ``fn`` inside the serving mesh's ``autoshard.hints`` context
+        (identity without a mesh).  The hints in the model's ragged decode
+        path — and the shard_map kernel dispatch in ``kernels.ops`` — bake
+        in at TRACE time, so every jitted serving fn must be CALLED under
+        the context, not merely created under it."""
+        if self.mesh is None:
+            return fn
+        mesh = self.mesh
+
+        def wrapped(*args):
+            with autoshard.hints(mesh):
+                return fn(*args)
+
+        return wrapped
 
     # -- prefill buckets -----------------------------------------------------
     def _resolve_buckets(self, prefill_buckets):
@@ -300,7 +376,7 @@ class ContinuousBatchingEngine:
         fn = self._prefill_fns.get(alloc_len)
         if fn is None:
             cfg, tp, moe_impl = self.cfg, self.model.tp, self._moe_impl
-            temperature = self.temperature
+            temperature, mesh = self.temperature, self.mesh
 
             def _fused_prefill(params, prompt, key, last_pos):
                 logits, cache = engine.prefill(
@@ -308,9 +384,9 @@ class ContinuousBatchingEngine:
                     moe_impl=moe_impl, last_pos=last_pos)
                 tok = engine.sample_token(logits, key, temperature, cfg=cfg,
                                           vocab=cfg.vocab)
-                return tok.astype(jnp.int32), cache
+                return tok.astype(jnp.int32), _pin_cache(cache, cfg, mesh)
 
-            fn = jax.jit(_fused_prefill)
+            fn = self._with_mesh(jax.jit(_fused_prefill))
             self._prefill_fns[alloc_len] = fn
         return fn
 
@@ -339,7 +415,7 @@ class ContinuousBatchingEngine:
         fn = self._extend_fns.get(key)
         if fn is None:
             cfg, tp, moe_impl = self.cfg, self.model.tp, self._moe_impl
-            temperature = self.temperature
+            temperature, mesh = self.temperature, self.mesh
 
             def _fused_extend(params, kv, gather_row, tokens, start, key,
                               last_idx):
@@ -348,9 +424,9 @@ class ContinuousBatchingEngine:
                     moe_impl=moe_impl, last_pos=last_idx)
                 tok = engine.sample_token(logits, key, temperature, cfg=cfg,
                                           vocab=cfg.vocab)
-                return tok.astype(jnp.int32), cache
+                return tok.astype(jnp.int32), _pin_cache(cache, cfg, mesh)
 
-            fn = jax.jit(_fused_extend)
+            fn = self._with_mesh(jax.jit(_fused_extend))
             self._extend_fns[key] = fn
         return fn
 
@@ -793,6 +869,11 @@ class ContinuousBatchingEngine:
             decode_tokens=st["decode_tokens"], wall_s=wall,
             paged=self.paged,
             prefill_compiles=len(self._prefill_shapes))
+        if self.mesh is not None:
+            out.update(mesh_axes=dict(zip(self.mesh.axis_names,
+                                          self.mesh.devices.shape)),
+                       kv_shards=dist_sharding.kv_shard_factor(self.cfg,
+                                                               self.mesh))
         if self.paged:
             out.update(page_size=self.page_size,
                        pages=self.allocator.usable_pages,

@@ -116,3 +116,26 @@ class TestCompare:
         bad, _, _ = cb.compare(base, _run(a={}), threshold=0.30,
                                min_us=100.0)
         assert sorted("missing" in f for f in bad) == [True, True]
+
+    def test_benches_scopes_the_gate(self):
+        """--benches limits which groups are gated: the serving-sharded
+        lane only owns serving_throughput rows."""
+        base = cb.merge_median([_run(a={"a/t": 200.0}, b={"b/t": 200.0})])
+        bad, _, _ = cb.compare(base, _run(b={"b/t": 210.0}),
+                               threshold=0.30, min_us=100.0,
+                               benches={"b"})
+        assert bad == []                  # group 'a' missing but unscoped
+
+    def test_sharded_rows_skip_on_single_device(self):
+        """Baseline rows containing 'sharded' are a note, not a failure,
+        when the current payload reports 1 device — and stay a hard
+        failure on a multi-device run."""
+        base = cb.merge_median([_run(
+            b={"b/sharded_decode": 5000.0, "b/t": 200.0})])
+        cur = {**_run(b={"b/t": 200.0}), "devices": 1}
+        ok, notes, _ = cb.compare(base, cur, threshold=0.30, min_us=100.0)
+        assert ok == [] and any("sharded lane cannot run" in n
+                                for n in notes)
+        cur4 = {**_run(b={"b/t": 200.0}), "devices": 4}
+        bad, _, _ = cb.compare(base, cur4, threshold=0.30, min_us=100.0)
+        assert len(bad) == 1 and "missing" in bad[0]
