@@ -30,6 +30,7 @@ SHAPES = (
     ("chunk_attention", 2048, 2048),
     ("decode_attention", 8, 4096),     # rows/cols = slots / cache positions
     ("decode_attention_paged", 8, 4096),
+    ("kv_page_quant", 2, 4096),        # rows/cols = kv heads / positions
 )
 
 FAST_SHAPES = (
@@ -39,6 +40,7 @@ FAST_SHAPES = (
     ("chunk_attention", 256, 512),
     ("decode_attention", 8, 512),
     ("decode_attention_paged", 8, 512),
+    ("kv_page_quant", 2, 512),
 )
 
 # CI smoke: one candidate apiece — proves sweep/persist/hit without timing
@@ -48,15 +50,21 @@ SMOKE_SHAPES = (
     ("chunk_attention", 256, 256),
     ("decode_attention", 8, 256),
     ("decode_attention_paged", 8, 256),
+    ("kv_page_quant", 2, 256),
 )
 
 
 def run(shapes=None, cache_file: str | None = None, reps: int = 3,
         min_time_s: float = 0.05):
+    import jax.numpy as jnp
+
     cache = registry.cache_path(cache_file)
     rows = []
     for op, r, c in shapes or SHAPES:
-        res = autotune.autotune_op(op, r, c, reps=reps,
+        # kv_page_quant caches under int8 — the dtype resolve_page_quant
+        # resolves against
+        dt = jnp.int8 if op == "kv_page_quant" else jnp.float32
+        res = autotune.autotune_op(op, r, c, dt, reps=reps,
                                    min_time_s=min_time_s,
                                    cache_file=cache_file)
         rows.append((f"autotune/{op}/r={r}/c={c}/default{res.default}",
@@ -65,7 +73,7 @@ def run(shapes=None, cache_file: str | None = None, reps: int = 3,
                      round(res.best_s * 1e6, 2), f"{res.speedup:.2f}x"))
         # round-trip: the persisted entry must now win resolution
         registry.load_cache(cache, force=True)
-        hit = registry.block_shapes(op, r, c, use_cache=True,
+        hit = registry.block_shapes(op, r, c, dt, use_cache=True,
                                     cache_file=cache)
         assert hit == res.best, (hit, res.best)
     rows.append((f"autotune/cache={cache}",

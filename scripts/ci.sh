@@ -44,7 +44,7 @@ fi
 # jax+pytest.  The format check is a HARD failure (flipped in ISSUE 5, as
 # deferred from PR 4).  ISSUE 7 asked for the one-time `ruff format .`
 # pass, but the dev container STILL ships no ruff binary (verified again
-# this PR: no `ruff` on PATH, no `python -m ruff`), so the pass cannot
+# in PR 8: no `ruff` on PATH, no `python -m ruff`), so the pass cannot
 # run here — it must happen on the first ruff-equipped CI runner that
 # reports drift: run `ruff format .` there and commit, or export
 # RUFF_FORMAT_ADVISORY=1 to downgrade the failure to a warning while

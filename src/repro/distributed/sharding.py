@@ -260,6 +260,14 @@ def pool_specs(pool_tree, cfg: ModelConfig, mesh):
             if not paged and leaf.shape[1] % dp_n == 0:
                 parts[1] = dp                        # strip slot axis
             return P(*parts)
+        if path_str.endswith(("/k_scale", "/v_scale")):
+            # int8-arena fp32 sidecars: "page_head" scales
+            # [L, P, ps, Hkv] split with the arena's head axis so each
+            # shard gathers its own heads' scales; "page" scales
+            # [L, P, ps] carry no head axis and replicate like the table.
+            if nd == 4:
+                parts[3] = kv_tp
+            return P(*parts)
         if path_str.endswith("ssm") and nd >= 2:     # slot-major state
             if leaf.shape[1] % dp_n == 0:
                 parts[1] = dp

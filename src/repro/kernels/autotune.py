@@ -122,6 +122,45 @@ def _runner_for(op: str) -> Callable:
                                               block_s=br, block_t=bc,
                                               use_kernel=uk)
         return run
+    if op == "kv_page_quant":
+        # int8 paged decode with fused dequant.  A candidate (br, bc) is a
+        # LAYOUT choice, not a kernel tile: bc is the page size and br the
+        # scale granularity (1 = one fp32 scale per page position, >1 = one
+        # per (position, kv head)).  Each layout's arena + sidecars are
+        # built once, outside the timed region; what is timed is the paged
+        # decode sweep that gathers int8 tiles + scales and dequantizes
+        # in-register.
+        uk = decode_kernel_path()
+        prepped: dict = {}
+
+        def run(args, br, bc):
+            import numpy as np
+
+            q, lengths, cols = args
+            if (br, bc) not in prepped:
+                slots, hkv, _, d = q.shape
+                ps, pmax = bc, -(-cols // bc)
+                pages = 1 + slots * pmax
+                rng = np.random.default_rng(0)
+                sshape = ((pages, ps, hkv) if br > 1 else (pages, ps))
+
+                def leaf():
+                    arena = jnp.asarray(rng.integers(
+                        -127, 128, (pages, ps, hkv, d), dtype=np.int8))
+                    sc = jnp.asarray(
+                        (rng.random(sshape) * 0.1 + 1e-3).astype(np.float32))
+                    return arena, sc
+
+                kp, ksc = leaf()
+                vp, vsc = leaf()
+                pt = jnp.asarray(rng.permutation(np.arange(1, pages))
+                                 .reshape(slots, pmax).astype(np.int32))
+                prepped[(br, bc)] = (kp, vp, ksc, vsc, pt)
+            kp, vp, ksc, vsc, pt = prepped[(br, bc)]
+            return ops.decode_attention_paged(q, kp, vp, pt, lengths,
+                                              k_scale=ksc, v_scale=vsc,
+                                              use_kernel=uk)
+        return run
     if op == "chunk_attention":
         # chunked-jnp path: blocks are chunk LENGTHS; counts are the same
         # ceil-div + unroll clamp models.attention.resolve_chunks applies.
@@ -147,8 +186,31 @@ def _runner_for(op: str) -> Callable:
 ATTN_PAGE_SIZE = 64      # fixed proxy page size for the paged decode sweep
 
 
+def _quant_candidates(rows: int, cols: int) -> list[tuple[int, int]]:
+    """(scale granularity, page size) layout candidates for the
+    ``kv_page_quant`` sweep.  ``registry.candidate_blocks`` models kernel
+    tiles (rows clamp to the problem's row count), but here rows encode
+    the scale granularity — 1 vs per-head — so the candidate set is
+    spelled out explicitly."""
+    spec = registry.get_spec("kv_page_quant")
+    rcands = [1] + ([min(spec.tune_row_cap, rows)] if rows > 1 else [])
+    cmax = max(spec.col_align, -(-cols // spec.col_align) * spec.col_align)
+    ccands = [c for c in (16, 32, 64, 128, 256)
+              if c <= min(cmax, spec.tune_col_cap)]
+    return [(r, c) for r in rcands for c in ccands]
+
+
 def _inputs_for(op: str, rows: int, cols: int, dtype):
     key = jax.random.PRNGKey(0)
+    if op == "kv_page_quant":
+        # rows/cols are (kv heads, logical cache positions) — the same
+        # axes resolve_page_quant resolves against; the arena layout
+        # itself is candidate-dependent and built in the runner.
+        q = jax.random.normal(key, (8, rows, 1, ATTN_HEAD_DIM)).astype(
+            jnp.float32)
+        lengths = jax.random.randint(jax.random.PRNGKey(1), (8,), 1,
+                                     cols + 1)
+        return (q, lengths, cols)
     if op == "decode_attention_paged":
         # rows/cols are (slots, logical cache positions); a fully-backed
         # arena with a shuffled page table — the gather is part of what is
@@ -216,7 +278,9 @@ def autotune_op(op: str, rows: int, cols: int, dtype=jnp.float32, *,
     spec = registry.get_spec(op)
     run = _runner_for(op)
     x = _inputs_for(op, rows, cols, dtype)
-    cands = candidates or registry.candidate_blocks(op, rows, cols)
+    cands = candidates or (_quant_candidates(rows, cols)
+                           if op == "kv_page_quant"
+                           else registry.candidate_blocks(op, rows, cols))
     default = spec.heuristic_blocks(rows, cols)
     if default not in cands:
         cands = list(cands) + [default]
@@ -263,6 +327,9 @@ DEFAULT_SWEEP = (
     ("decode_attention", 8, 4096),
     # paged serving decode: same pool, KV gathered through the page table
     ("decode_attention_paged", 8, 4096),
+    # int8 page layout (rows = kv heads, cols = cache positions): sweeps
+    # page size x scale granularity under the fused-dequant decode
+    ("kv_page_quant", 2, 4096),
 )
 
 
@@ -271,7 +338,9 @@ def main(argv=None) -> None:
     p.add_argument("--op", default=None,
                    help="softmax|logsumexp|xent|flash_attention|"
                         "chunk_attention (rows/cols = Sq/Skv)|"
-                        "decode_attention (rows/cols = slots/Skv)")
+                        "decode_attention (rows/cols = slots/Skv)|"
+                        "kv_page_quant (rows/cols = kv heads/positions; "
+                        "always swept at int8)")
     p.add_argument("--rows", type=int, default=64)
     p.add_argument("--cols", type=int, default=4096)
     p.add_argument("--dtype", default="float32")
@@ -283,7 +352,10 @@ def main(argv=None) -> None:
     sweep = ([(args.op, args.rows, args.cols)] if args.op
              else list(DEFAULT_SWEEP))
     for op, rows, cols in sweep:
-        r = autotune_op(op, rows, cols, jnp.dtype(args.dtype),
+        # kv_page_quant caches under int8 — the dtype resolve_page_quant
+        # looks up — whatever the sweep-wide dtype is
+        dt = jnp.int8 if op == "kv_page_quant" else jnp.dtype(args.dtype)
+        r = autotune_op(op, rows, cols, dt,
                         cache_file=args.cache, verbose=True)
         print(f"{op} {rows}x{cols}: best={r.best} "
               f"({r.best_s * 1e6:.1f}us) default={r.default} "

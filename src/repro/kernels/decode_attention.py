@@ -69,7 +69,8 @@ def _grid_spec(num_scalar_prefetch, grid, in_specs, out_specs):
 
 
 def _mn_fold_tile(o_ref, m_ref, n_ref, q, k, v, kpos, length, *,
-                  scale: float, window: int | None, j, last_j: int):
+                  scale: float, window: int | None, j, last_j: int,
+                  k_scale=None, v_scale=None):
     """Score one KV tile, mask it, fold it into the running (o, m, n)
     accumulator refs, and normalize on the sweep's last step.
 
@@ -84,9 +85,18 @@ def _mn_fold_tile(o_ref, m_ref, n_ref, q, k, v, kpos, length, *,
     zeros, never NaN — matching the jnp reference forms bit-for-bit in
     structure (the accumulation order within a tile differs, so parity is
     allclose, not bitwise).
+
+    ``k_scale``/``v_scale`` ((1, BT) f32) fuse int8 dequantization into
+    the fold: ``k``/``v`` then hold raw int8 codes cast to f32 in-register
+    and the symmetric per-column scales commute through the dots —
+    ``(q · k) * k_scale`` scores and ``(w * v_scale) · v`` output equal
+    attention over dequantized tiles with zero extra passes, the paper's
+    bandwidth argument applied to the arena bytes themselves.
     """
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        s = s * k_scale                              # (G, BT) * (1, BT)
     mask = kpos < length                             # (1, BT), broadcasts
     if window is not None:
         mask &= kpos > length - 1 - window
@@ -96,6 +106,8 @@ def _mn_fold_tile(o_ref, m_ref, n_ref, q, k, v, kpos, length, *,
     n_loc = jnp.max(n, axis=-1, keepdims=True)       # (G, 1)
     w = m * exp2_int(n - n_loc)                      # numerators / 2^n_loc
     m_loc = jnp.sum(w, axis=-1, keepdims=True)
+    if v_scale is not None:
+        w = w * v_scale                              # fold AFTER m_loc
     o_loc = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
 
@@ -188,28 +200,48 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def _paged_kernel(pt_ref, len_ref, q_ref, *refs, scale: float,
-                  window: int | None, ps: int, ppt: int, nt: int):
+                  window: int | None, ps: int, ppt: int, nt: int,
+                  quant: bool = False):
     krefs, vrefs = refs[:ppt], refs[ppt:2 * ppt]
-    o_ref, m_ref, n_ref = refs[2 * ppt:]
+    ks = vs = None
+    if quant:
+        # int8 arenas: the pages' fp32 scale rows ride the same
+        # scalar-prefetch gather, one (1, ps)-shaped block per page.
+        ksrefs, vsrefs = refs[2 * ppt:3 * ppt], refs[3 * ppt:4 * ppt]
+        o_ref, m_ref, n_ref = refs[4 * ppt:]
+
+        def srow(r):                         # -> (1, ps) per-column scales
+            return r[...] if len(r.shape) == 2 else r[:, :, 0]
+
+        ks = jnp.concatenate([srow(r) for r in ksrefs], 1)
+        vs = jnp.concatenate([srow(r) for r in vsrefs], 1)
+    else:
+        o_ref, m_ref, n_ref = refs[2 * ppt:]
     s_idx = pl.program_id(0)
     j = pl.program_id(2)
     # Each of the tile's ppt pages arrived via its own scalar-prefetch
     # block fetch (non-contiguous in the arena); concatenated they form
-    # the contiguous logical window [j*ppt*ps, (j+1)*ppt*ps).
+    # the contiguous logical window [j*ppt*ps, (j+1)*ppt*ps).  On the
+    # quantized path the astype is the whole dequant story: int8 codes
+    # widen to f32 IN REGISTER, per tile — the arena itself is never
+    # copied to a full-precision buffer.
     k = jnp.concatenate([r[0, :, 0].astype(jnp.float32) for r in krefs], 0)
     v = jnp.concatenate([r[0, :, 0].astype(jnp.float32) for r in vrefs], 0)
     kpos = (j * (ppt * ps)
             + jax.lax.broadcasted_iota(jnp.int32, (1, ppt * ps), 1))
     _mn_fold_tile(o_ref, m_ref, n_ref, q_ref[0, 0].astype(jnp.float32),
                   k, v, kpos, len_ref[s_idx], scale=scale, window=window,
-                  j=j, last_j=nt - 1)
+                  j=j, last_j=nt - 1, k_scale=ks, v_scale=vs)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("scale", "window", "pages_per_tile"))
 def decode_attention_paged_pallas(q: jax.Array, k_pages: jax.Array,
                                   v_pages: jax.Array, page_table: jax.Array,
-                                  lengths: jax.Array, *, scale: float,
+                                  lengths: jax.Array,
+                                  k_scale: jax.Array | None = None,
+                                  v_scale: jax.Array | None = None,
+                                  *, scale: float,
                                   window: int | None = None,
                                   pages_per_tile: int = 1) -> jax.Array:
     """Single-query attention against a PAGED cache, Pallas path.
@@ -223,11 +255,20 @@ def decode_attention_paged_pallas(q: jax.Array, k_pages: jax.Array,
     backing no valid position (free slots, pages past ``lengths``, the
     pad below) may point anywhere in the arena — the length mask makes
     their content invisible.  Returns [S, Hkv, G, Dv] in q.dtype.
+
+    int8 arenas pass ``k_scale``/``v_scale`` fp32 sidecars (``[P, ps]``
+    "page" granularity or ``[P, ps, Hkv]`` "page_head"): each page's scale
+    row is gathered as one more scalar-prefetch block alongside its page,
+    and dequantization happens inside the (m, n) fold — int8 codes widen
+    to f32 in-register per tile, scales apply as per-column multipliers
+    (:func:`_mn_fold_tile`); a full-precision copy of the arena is never
+    materialized in HBM or VMEM.
     """
     s, hkv, g, d = q.shape
     ps = k_pages.shape[1]
     dv = v_pages.shape[3]
     pmax = page_table.shape[1]
+    quant = k_scale is not None
     ppt = max(1, min(pages_per_tile, pmax, MAX_PAGES_PER_TILE))
     ppad = pl.cdiv(pmax, ppt) * ppt
     if ppad != pmax:
@@ -241,15 +282,30 @@ def decode_attention_paged_pallas(q: jax.Array, k_pages: jax.Array,
             (1, ps, 1, width),
             lambda si, h, j, tab, ln, i=i: (tab[si, j * ppt + i], 0, h, 0))
 
+    def scale_spec(i, leaf):
+        if leaf.ndim == 2:                           # [P, ps] "page"
+            return pl.BlockSpec(
+                (1, ps),
+                lambda si, h, j, tab, ln, i=i: (tab[si, j * ppt + i], 0))
+        return pl.BlockSpec(                         # [P, ps, Hkv]
+            (1, ps, 1),
+            lambda si, h, j, tab, ln, i=i: (tab[si, j * ppt + i], 0, h))
+
     kernel = functools.partial(_paged_kernel, scale=scale, window=window,
-                               ps=ps, ppt=ppt, nt=nt)
+                               ps=ps, ppt=ppt, nt=nt, quant=quant)
+    scale_specs, scale_args = [], ()
+    if quant:
+        scale_specs = ([scale_spec(i, k_scale) for i in range(ppt)]
+                       + [scale_spec(i, v_scale) for i in range(ppt)])
+        scale_args = (*([k_scale] * ppt), *([v_scale] * ppt))
     grid_spec = _grid_spec(
         2, (s, hkv, nt),
         in_specs=(
             [pl.BlockSpec((1, 1, g, d),
                           lambda si, h, j, tab, ln: (si, h, 0, 0))]
             + [page_spec(i, d) for i in range(ppt)]
-            + [page_spec(i, dv) for i in range(ppt)]),
+            + [page_spec(i, dv) for i in range(ppt)]
+            + scale_specs),
         out_specs=[
             pl.BlockSpec((1, 1, g, dv),
                          lambda si, h, j, tab, ln: (si, h, 0, 0)),
@@ -269,5 +325,5 @@ def decode_attention_paged_pallas(q: jax.Array, k_pages: jax.Array,
         interpret=_interpret(),
         **_tpu_params(("parallel", "parallel", "arbitrary")),
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, *([k_pages] * ppt), *([v_pages] * ppt))
+      q, *([k_pages] * ppt), *([v_pages] * ppt), *scale_args)
     return o.astype(q.dtype)

@@ -252,7 +252,8 @@ _NEG_INF = -jnp.inf
 
 
 def _mn_mask_update(acc, q_blk, k_chunk, v_chunk, kpos, l_blk, *,
-                    scale: float, window: int | None):
+                    scale: float, window: int | None,
+                    k_scale=None, v_scale=None):
     """One (m, n) online-softmax accumulation step of the single-query
     decode sweep: score the chunk, apply the length/window mask, fold into
     the running ``(o, m, n)`` accumulator (rescales are exact powers of two,
@@ -261,11 +262,19 @@ def _mn_mask_update(acc, q_blk, k_chunk, v_chunk, kpos, l_blk, *,
     The slot's query sits at position ``l_blk - 1`` (write-then-attend), so
     the validity prefix IS the causal mask; SWA adds a lower bound relative
     to that query position.
+
+    ``k_scale``/``v_scale`` (broadcastable to the ``[s, h, g, t]`` score
+    shape) fuse int8 dequantization into the sweep: a symmetric per-column
+    scale commutes through the dot products, so ``(q · k_int8) * k_scale``
+    and ``(w * v_scale) · v_int8`` equal attention over the dequantized
+    chunk exactly — no full-precision copy of the chunk is ever formed.
     """
     from repro.core import numerics
 
     o_acc, m_acc, n_acc = acc
     sco = jnp.einsum("shgd,shtd->shgt", q_blk, k_chunk) * scale
+    if k_scale is not None:
+        sco = sco * k_scale
     mask = kpos[None, :] < l_blk[:, None]
     if window is not None:
         mask &= kpos[None, :] > l_blk[:, None] - 1 - window
@@ -275,6 +284,8 @@ def _mn_mask_update(acc, q_blk, k_chunk, v_chunk, kpos, l_blk, *,
     n_loc = jnp.max(n, axis=-1, keepdims=True)
     w = m * numerics.exp2_int(n - n_loc)
     m_loc = jnp.sum(w, axis=-1, keepdims=True)
+    if v_scale is not None:
+        w = w * v_scale
     o_loc = jnp.einsum("shgt,shtd->shgd", w, v_chunk)
 
     n_new = jnp.maximum(n_acc, n_loc)
@@ -330,16 +341,34 @@ def _decode_attention_chunked(q, k, v, lengths, *, scale: float,
     return jnp.concatenate(outs, axis=0).astype(q.dtype)
 
 
+def _gather_scale_chunk(scale_leaf, pt, bs, npg, ps, hkv):
+    """Gather one t-chunk's scale rows through the page table and shape
+    them to broadcast against the ``[bs, hkv, g, t]`` scores: ``[bs, 1, 1,
+    t]`` for "page" scales (``[P, ps]`` sidecar), ``[bs, hkv, 1, t]`` for
+    "page_head" (``[P, ps, Hkv]``)."""
+    sch = scale_leaf[pt]                             # [bs, npg, ps(, hkv)]
+    if scale_leaf.ndim == 2:
+        return sch.reshape(bs, 1, 1, npg * ps)
+    return sch.reshape(bs, npg * ps, hkv).transpose(0, 2, 1)[:, :, None, :]
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "window",
                                              "n_s_chunks", "n_t_chunks"))
 def _decode_attention_paged_chunked(q, k_pages, v_pages, page_table, lengths,
+                                    k_scale=None, v_scale=None,
                                     *, scale: float, window: int | None,
                                     n_s_chunks: int, n_t_chunks: int):
     """Paged variant of :func:`_decode_attention_chunked`: K/V live in a
     shared page arena and are gathered per t-chunk through the per-slot page
     table, so only a chunk's worth of contiguous KV ever materializes.  The
     (m, n) accumulation is order-free (power-of-two rescales), which is what
-    lets the sweep visit arena pages in whatever order the table holds."""
+    lets the sweep visit arena pages in whatever order the table holds.
+
+    With ``k_scale``/``v_scale`` (int8 arenas + fp32 sidecars) the chunk's
+    scale rows are gathered through the same table and folded into the
+    sweep as per-column multipliers (:func:`_mn_mask_update`): the int8
+    pages are cast per-chunk on their way into the dot products, never as
+    a whole-arena full-precision copy."""
     s, hkv, g, d = q.shape
     ps = k_pages.shape[1]                 # tokens per page
     pmax = page_table.shape[1]            # pages per slot (logical T / ps)
@@ -369,11 +398,15 @@ def _decode_attention_paged_chunked(q, k_pages, v_pages, page_table, lengths,
             pt = pt_blk[:, p0:p1]
             kc = k_pages[pt].reshape(bs, npg * ps, hkv, d)
             vc = v_pages[pt].reshape(bs, npg * ps, hkv, dv)
+            ksc = vsc = None
+            if k_scale is not None:
+                ksc = _gather_scale_chunk(k_scale, pt, bs, npg, ps, hkv)
+                vsc = _gather_scale_chunk(v_scale, pt, bs, npg, ps, hkv)
             acc = _mn_mask_update(
                 acc, q_blk, kc.transpose(0, 2, 1, 3).astype(jnp.float32),
                 vc.transpose(0, 2, 1, 3).astype(jnp.float32),
                 jnp.arange(p0 * ps, p1 * ps), l_blk,
-                scale=scale, window=window)
+                scale=scale, window=window, k_scale=ksc, v_scale=vsc)
         outs.append(acc[0] / jnp.maximum(acc[1], 1e-37))
     return jnp.concatenate(outs, axis=0).astype(q.dtype)
 
@@ -445,6 +478,8 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, page_table: jax.Array,
                            lengths: jax.Array, *, scale: float | None = None,
                            window: int | None = None,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
                            block_s: int | None = None,
                            block_t: int | None = None,
                            policy=None, use_kernel: bool | None = None
@@ -471,6 +506,14 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
     scalar-prefetched table (``pages_per_tile = block_t // ps``, capped by
     ``decode_attention.MAX_PAGES_PER_TILE``); the jnp fallback gathers
     whole page chunks via ``jnp.take`` into the shared (m, n) sweep.
+
+    Quantized arenas (``kv_cache.init_paged_pool(page_dtype="int8")``) pass
+    int8 ``k_pages``/``v_pages`` plus ``k_scale``/``v_scale`` fp32 sidecars
+    (``[P, ps]`` "page" granularity or ``[P, ps, Hkv]`` "page_head");
+    dequantization is fused into the (m, n) sweep — scale rows are gathered
+    through the same page table and applied as per-column multipliers
+    inside each tile, so no full-precision copy of the arena is ever
+    materialized (the ``kv_page_quant`` registry op tunes the geometry).
     """
     s, hkv, _, d = q.shape
     ps = k_pages.shape[1]
@@ -490,17 +533,28 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
         if shards > 1:
             # q heads (dim 1) and arena heads (dim 2 of [P, ps, Hkv, D])
             # over model; the table and lengths replicated so every shard
-            # gathers its own heads of each page.
+            # gathers its own heads of each page.  "page" scales carry no
+            # head axis (replicated); "page_head" scales split with the
+            # arena heads.
+            sc_spec = ()
+            if k_scale is not None:
+                one = (P(None, None) if k_scale.ndim == 2
+                       else P(None, None, "model"))
+                sc_spec = (one, one)
             fn = shard_map(
                 fn, mesh=mesh,
                 in_specs=(P(None, "model", None, None),
                           P(None, None, "model", None),
                           P(None, None, "model", None),
-                          P(None, None), P(None)),
+                          P(None, None), P(None)) + sc_spec,
                 out_specs=P(None, "model", None, None), check_rep=False)
+        if k_scale is not None:
+            return fn(q, k_pages, v_pages, page_table, lengths, k_scale,
+                      v_scale)
         return fn(q, k_pages, v_pages, page_table, lengths)
     return _decode_attention_paged_chunked(
-        q, k_pages, v_pages, page_table, lengths, scale=scale, window=window,
+        q, k_pages, v_pages, page_table, lengths, k_scale, v_scale,
+        scale=scale, window=window,
         n_s_chunks=min(MAX_SLOT_CHUNKS, -(-s // bs)),
         n_t_chunks=min(MAX_T_CHUNKS, -(-pmax // pages_per_chunk)))
 

@@ -318,6 +318,20 @@ register(KernelSpec(name="decode_attention_paged", row_align=8, row_cap=256,
 register(KernelSpec(name="kv_page", row_align=1, row_cap=1,
                     col_align=16, col_cap=128, full_col_threshold=0,
                     tune_col_cap=512))
+# Quantized KV pages (serving/kv_cache.resolve_page_quant): cols model the
+# tokens per page of an int8 pool exactly like ``kv_page``; rows model the
+# SCALE GRANULARITY — 1 = one fp32 scale per stored position ("page"),
+# >1 = one per (position, kv head) ("page_head").  The heuristic keeps the
+# kv_page geometry with "page" scales (smallest sidecar: 4 bytes/token per
+# leaf); the tuner may find per-head scales worth their extra bytes
+# (tune_row_cap=8 bounds a cache entry's row count, clamped to the pool's
+# own n_kv_heads at resolution), and sweeps page sizes like kv_page.  The
+# runner times the fused-dequant paged decode op under each geometry, so
+# the tradeoff it measures is the real one: sidecar gather width vs
+# per-tile dequant work.
+register(KernelSpec(name="kv_page_quant", row_align=1, row_cap=1,
+                    col_align=16, col_cap=128, full_col_threshold=0,
+                    tune_row_cap=8, tune_col_cap=512))
 
 
 def bind(op: str, fn: Callable) -> None:

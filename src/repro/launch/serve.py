@@ -33,6 +33,20 @@ def main():
                    help="arena page count incl. the trash page (default: "
                         "full provisioning; fewer = oversubscribe, "
                         "preempt on OOM)")
+    p.add_argument("--kv-dtype", default=None, choices=["int8"],
+                   help="quantize the page arenas (int8 pages + fp32 "
+                        "scale sidecars, dequant fused into the decode "
+                        "sweep; default: the model dtype)")
+    p.add_argument("--scale-granularity", default=None,
+                   choices=["page", "page_head"],
+                   help="int8 scale granularity: one scale per page "
+                        "position, or per (position, kv head) "
+                        "(default: kv_page_quant registry resolution)")
+    p.add_argument("--host-swap-bytes", type=int, default=None,
+                   help="host-RAM swap budget: under page pressure cold "
+                        "slots demote their pages to host RAM "
+                        "(bit-lossless) instead of being preempted and "
+                        "recomputed (default: swap tier off)")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--arrival-rate", type=float, default=None,
                    help="Poisson request arrivals per second "
@@ -113,7 +127,9 @@ def main():
             paged=False if args.strip else "auto",
             page_size=args.page_size, pages=args.pages,
             prefix_cache=False if args.no_prefix_cache else "auto",
-            mesh=mesh)
+            mesh=mesh, page_dtype=args.kv_dtype,
+            scale_granularity=args.scale_granularity,
+            host_swap_bytes=args.host_swap_bytes)
         rng = np.random.default_rng(0)
         arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                               args.requests))
@@ -128,9 +144,11 @@ def main():
                 for i in range(args.requests)]
         comps = eng.run(reqs)
         st = eng.stats
+        quant = (f", int8/{eng.scale_granularity} scales"
+                 if eng.page_dtype else "")
         pool = (f"paged pool ({eng.allocator.usable_pages} pages x "
-                f"{eng.page_size} tok, peak {st['peak_pages']} in use, "
-                f"{st['preempted']} preempted)" if eng.paged
+                f"{eng.page_size} tok{quant}, peak {st['peak_pages']} in "
+                f"use, {st['preempted']} preempted)" if eng.paged
                 else "strip pool")
         print(f"{args.arch}: served {len(comps)} requests over "
               f"{args.slots} slots / {pool} ({st['steps']} ragged decode "
@@ -148,6 +166,10 @@ def main():
                   f"{eng.prefix_cache.n_pages} pages indexed")
         elif not args.no_prefix_cache and eng.paged:
             print("prefix cache: off (family needs full-prompt prefill)")
+        if eng.host_swap is not None:
+            print(f"host swap: {st['demoted']} demoted, "
+                  f"{st['prefetched']} prefetched back, "
+                  f"{eng.host_swap.bytes_used} bytes resident")
         ttfts = sorted(c.ttft_s for c in comps if c.ttft_s is not None)
         if ttfts:
             print(f"ttft: p50 {ttfts[len(ttfts) // 2] * 1e3:.2f}ms  "

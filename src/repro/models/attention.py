@@ -304,22 +304,57 @@ def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
             pg = jnp.take_along_axis(page_table, (wpos // ps)[:, None],
                                      axis=1)[:, 0]
             off = wpos % ps
-            ck = cache["k"].at[pg, off].set(k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[pg, off].set(v[:, 0].astype(cache["v"].dtype))
+            cks = cvs = None
+            if "k_scale" in cache:
+                # int8 arena: quantize THIS token's row (symmetric absmax,
+                # same formula as kv_cache adopt) and write its own scale
+                # at [pg, off] — scales are stored per position exactly so
+                # a decode write never requantizes existing page contents.
+                per_head = cache["k_scale"].ndim == 3
+                axes = (2,) if per_head else (1, 2)
+                kt = k[:, 0].astype(jnp.float32)       # [b, hkv, hd]
+                vt = v[:, 0].astype(jnp.float32)
+                kmax = jnp.max(jnp.abs(kt), axis=axes)
+                vmax = jnp.max(jnp.abs(vt), axis=axes)
+                ksc = jnp.where(kmax > 0.0, kmax / 127.0, 1.0)
+                vsc = jnp.where(vmax > 0.0, vmax / 127.0, 1.0)
+                kdiv = ksc[..., None] if per_head else ksc[:, None, None]
+                vdiv = vsc[..., None] if per_head else vsc[:, None, None]
+                k_row = jnp.round(
+                    jnp.clip(kt / kdiv, -127.0, 127.0)).astype(jnp.int8)
+                v_row = jnp.round(
+                    jnp.clip(vt / vdiv, -127.0, 127.0)).astype(jnp.int8)
+                ck = cache["k"].at[pg, off].set(k_row)
+                cv = cache["v"].at[pg, off].set(v_row)
+                cks = cache["k_scale"].at[pg, off].set(ksc)
+                cvs = cache["v_scale"].at[pg, off].set(vsc)
+            else:
+                ck = cache["k"].at[pg, off].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[pg, off].set(
+                    v[:, 0].astype(cache["v"].dtype))
             kk = hint(ck, pos_tp, None, hd_tp, None)
             vv = hint(cv, pos_tp, None, hd_tp, None)
+            ks_op, vs_op = cks, cvs
             if grouped:
                 qg = hint(q[:, 0].reshape(b, hkv, hq // hkv, hd),
                           "dp", hd_tp, None, None)
             else:                                  # kv expanded per q-head
                 kk = kk[:, :, head_to_kv]
                 vv = vv[:, :, head_to_kv]
+                if cks is not None and cks.ndim == 3:
+                    ks_op = cks[:, :, head_to_kv]  # per-head scales follow
+                    vs_op = cvs[:, :, head_to_kv]
                 qg = hint(q[:, 0][:, :, None], "dp", hd_tp, None, None)
             o = kernel_ops.decode_attention_paged(
                 qg, kk, vv, page_table, wpos + 1, scale=hd ** -0.5,
-                window=window, policy=cfg.softmax_policy())
+                window=window, k_scale=ks_op, v_scale=vs_op,
+                policy=cfg.softmax_policy())
             o = hint(o.reshape(b, 1, hq * hd), "dp", None, hd_tp)
-            return layers.dense(p["wo"], o), {"k": ck, "v": cv}
+            new_cache = {"k": ck, "v": cv}
+            if cks is not None:
+                new_cache.update(k_scale=cks, v_scale=cvs)
+            return layers.dense(p["wo"], o), new_cache
 
         wpos = jnp.minimum(cache_positions.astype(jnp.int32),
                            cache["k"].shape[1] - 1)

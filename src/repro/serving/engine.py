@@ -251,7 +251,7 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
     return logits, new_cache
 
 
-def gather_pages(kv: dict, page_row):
+def gather_pages(kv: dict, page_row, dtype=None):
     """Gather arena pages into a batch=1 position-major prefill cache:
     each leaf ``[L, P, ps, ...]`` -> ``[L, 1, len(page_row) * ps, ...]``
     with ``page_row``'s pages laid out contiguously.  The prefix-sharing
@@ -259,12 +259,21 @@ def gather_pages(kv: dict, page_row):
     the tail can prefill *after* it (``prefill_extend``), without the arena
     ever being written.  Entries past the matched prefix may be the trash
     page — their garbage sits beyond ``cache_pos`` and is overwritten by
-    the tail's own writes or masked by ``kv_len``."""
+    the tail's own writes or masked by ``kv_len``.
+
+    Quantized arenas dequantize ON GATHER (``dtype`` sets the result dtype,
+    default f32) and drop the scale leaves: the caller gets the plain
+    ``{"k", "v"}`` position-major cache every prefill path expects — only
+    the gathered slot's pages ever widen, never the arena — and adoption
+    re-quantizes whatever fresh pages come back."""
     def one(leaf):
         g = leaf[:, page_row]                     # [L, n, ps, ...]
         return g.reshape(g.shape[0], 1, g.shape[1] * g.shape[2],
                          *g.shape[3:])
-    return jax.tree.map(one, kv)
+    g = jax.tree.map(one, kv)
+    if isinstance(g, dict) and "k_scale" in g:
+        g = kv_cache.dequantize_pages(g, dtype or jnp.float32)
+    return g
 
 
 def prefill_extend(params: Params, tokens, kv: dict, page_row, start_pos, *,
@@ -293,7 +302,7 @@ def prefill_extend(params: Params, tokens, kv: dict, page_row, start_pos, *,
     any fresh page from it.
     """
     b, t = tokens.shape
-    cache = gather_pages(kv, page_row)
+    cache = gather_pages(kv, page_row, dtype=jnp.dtype(cfg.dtype))
     idx = jnp.arange(t) + jnp.asarray(start_pos, jnp.int32)
     cos, sin = transformer._cos_sin(cfg, transformer._positions_at(cfg, b,
                                                                    idx))

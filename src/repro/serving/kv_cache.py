@@ -175,14 +175,59 @@ def resolve_page_size(cfg: ModelConfig, max_len: int,
     return int(ps)
 
 
+def resolve_page_quant(cfg: ModelConfig, max_len: int,
+                       page_size: int | None = None,
+                       scale_granularity: str | None = None
+                       ) -> tuple[int, str]:
+    """(page_size, scale_granularity) for an int8 paged pool, resolved
+    through the ``kv_page_quant`` registry spec: block cols model the
+    tokens per page (exactly like ``kv_page``) and block rows model the
+    scale granularity — 1 row = one scale per page position ("page"),
+    more rows = one scale per (position, kv head) ("page_head").
+    Explicit arguments win per-axis; otherwise the policy's autotune
+    cache, otherwise the heuristic (128-token pages, "page" scales)."""
+    if page_size is not None and scale_granularity is not None:
+        _check_granularity(scale_granularity)
+        return int(page_size), scale_granularity
+    from repro.kernels import registry  # lazy: kernels are optional
+
+    pol = cfg.softmax_policy()
+    gr, ps = registry.block_shapes(
+        "kv_page_quant", cfg.n_kv_heads, max_len, jnp.int8,
+        use_cache=pol.autotune, cache_file=pol.autotune_cache)
+    if page_size is not None:
+        ps = page_size
+    if scale_granularity is None:
+        scale_granularity = "page_head" if gr > 1 else "page"
+    _check_granularity(scale_granularity)
+    return int(ps), scale_granularity
+
+
+def _check_granularity(granularity: str) -> None:
+    if granularity not in ("page", "page_head"):
+        raise ValueError(f"unknown scale granularity {granularity!r}; "
+                         "expected 'page' or 'page_head'")
+
+
 def pages_per_slot(max_len: int, page_size: int) -> int:
     """Page-table width: pages covering a slot's ``max_len`` positions."""
     return -(-int(max_len) // int(page_size))
 
 
+def supports_page_quant(cfg: ModelConfig) -> bool:
+    """Families whose paged pool can store int8 pages: the flat ``k``/``v``
+    arenas (dense / moe / vlm).  MLA stores latents (a different numeric
+    regime — quantizing ``c`` compounds through two projections) and hybrid
+    carries slot-major ssm state next to its pages; both keep full-precision
+    pages."""
+    return supports_paging(cfg) and cfg.mla is None and cfg.family != "hybrid"
+
+
 def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
                     *, page_size: int | None = None,
-                    pages: int | None = None, mesh=None) -> dict:
+                    pages: int | None = None, mesh=None,
+                    page_dtype: str | None = None,
+                    scale_granularity: str | None = None) -> dict:
     """A paged KV pool: shared page arena + per-slot page table.
 
     Returns ``{"kv": <stacked-layer page arenas>, "page_table":
@@ -195,6 +240,17 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
     entries init to the trash page; ``lengths`` semantics match the strip
     pool (:func:`init_slot_pool`).
 
+    ``page_dtype="int8"`` (flat k/v families only, see
+    :func:`supports_page_quant`) stores the arenas as symmetric-absmax int8
+    with an fp32 scale sidecar per leaf: ``k_scale``/``v_scale`` shaped
+    ``[L, pages, page_size]`` ("page" granularity — one scale per stored
+    position) or ``[L, pages, page_size, n_kv_heads]`` ("page_head").
+    Scales are stored PER POSITION even at "page" granularity so a decode
+    write quantizes only its own row — adopting a prefilled page broadcasts
+    the page-level absmax across its positions, and existing rows are never
+    requantized.  Default ``page_dtype=None`` keeps the arenas in the
+    model's compute dtype, byte-for-byte identical to the unquantized pool.
+
     ``mesh`` (a ('data', 'model') serving mesh) lays the pool out sharded
     per :func:`repro.distributed.sharding.pool_specs`: arena KV-head axis
     over ``model``, page table / lengths replicated (see
@@ -202,7 +258,19 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
     """
     if not supports_paging(cfg):
         raise ValueError(f"family {cfg.family!r} has no pageable cache")
-    ps = resolve_page_size(cfg, max_len, page_size)
+    if page_dtype not in (None, "int8"):
+        raise ValueError(f"unknown page_dtype {page_dtype!r}; "
+                         "expected None or 'int8'")
+    quant = page_dtype == "int8"
+    if quant and not supports_page_quant(cfg):
+        raise ValueError(f"family {cfg.family!r} (mla={cfg.mla is not None})"
+                         " has no int8 page path: quantized pages need the"
+                         " flat k/v arenas (dense / moe / vlm)")
+    if quant:
+        ps, gran = resolve_page_quant(cfg, max_len, page_size,
+                                      scale_granularity)
+    else:
+        ps = resolve_page_size(cfg, max_len, page_size)
     n_tab = pages_per_slot(max_len, ps)
     if pages is None:
         pages = 1 + slots * n_tab
@@ -221,6 +289,13 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
                   "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt)},
               "ssm": jnp.zeros((ls, slots, h, cfg.ssm.state_size,
                                 cfg.ssm.head_dim), jnp.float32)}
+    elif quant:                                    # dense / moe / vlm, int8
+        sshape = ((ls, pages, ps) if gran == "page"
+                  else (ls, pages, ps, cfg.n_kv_heads))
+        kv = {"k": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), jnp.int8),
+              "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), jnp.int8),
+              "k_scale": jnp.zeros(sshape, jnp.float32),
+              "v_scale": jnp.zeros(sshape, jnp.float32)}
     else:                                          # dense / moe / vlm
         kv = {"k": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt),
               "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt)}
@@ -241,6 +316,32 @@ def shard_pool(pool: dict, cfg: ModelConfig, mesh) -> dict:
                                           mesh))
 
 
+def quantize_symmetric(x, axes):
+    """Symmetric absmax int8 quantization of ``x`` with one scale per
+    element of the non-``axes`` dims: ``q = round(x / scale)`` clipped to
+    [-127, 127], ``scale = absmax / 127`` (1.0 where absmax is 0, so the
+    all-zero trash page round-trips to exact zeros).  Returns ``(q int8,
+    scale f32 with ``axes`` kept as size-1 dims)``."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    q = jnp.round(jnp.clip(xf / scale, -127.0, 127.0)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_pages(kv, dtype):
+    """``{"k", "v", "k_scale", "v_scale"}`` int8 leaves (arena- or
+    gathered-shape: scales trail the value leaves by 2 dims at "page"
+    granularity, by 1 at "page_head") back to ``{"k", "v"}`` in
+    ``dtype``."""
+    out = {}
+    for n in ("k", "v"):
+        s = kv[n + "_scale"]
+        s = s[..., None, None] if s.ndim == kv[n].ndim - 2 else s[..., None]
+        out[n] = (kv[n].astype(jnp.float32) * s).astype(dtype)
+    return out
+
+
 def _copy_pages(dst, src, page_row):
     """Scatter a batch=1 position-major prefill cache ``[L, 1, T, ...]``
     into arena pages ``[L, P, ps, ...]`` at the table row's ids.  T must be
@@ -256,6 +357,27 @@ def _copy_pages(dst, src, page_row):
     n_copy = min(n_src, page_row.shape[0])
     srcp = src[:, 0].reshape(ls, n_src, ps, *src.shape[3:])[:, :n_copy]
     return dst.at[:, page_row[:n_copy]].set(srcp.astype(dst.dtype))
+
+
+def _copy_pages_quant(dst, scale_dst, src, page_row):
+    """Quantizing :func:`_copy_pages`: scatter a full-precision prefill
+    cache into an int8 arena + its fp32 scale sidecar.  The absmax is
+    taken per page ("page" granularity, 3-D sidecar) or per (page, head)
+    ("page_head", 4-D) and broadcast across the page's positions — see
+    :func:`init_paged_pool` for why scales are stored per position."""
+    ls, _, ps = dst.shape[:3]
+    n_src = src.shape[2] // ps
+    n_copy = min(n_src, page_row.shape[0])
+    srcp = src[:, 0].reshape(ls, n_src, ps, *src.shape[3:])[:, :n_copy]
+    per_head = scale_dst.ndim == 4
+    q, scale = quantize_symmetric(srcp, (2, 4) if per_head else (2, 3, 4))
+    if per_head:                                  # [ls, n, 1, H] -> ps rows
+        srows = jnp.broadcast_to(scale[:, :, :, :, 0],
+                                 (ls, n_copy, ps, srcp.shape[3]))
+    else:                                         # [ls, n, 1] -> ps rows
+        srows = jnp.broadcast_to(scale[:, :, :, 0, 0], (ls, n_copy, ps))
+    return (dst.at[:, page_row[:n_copy]].set(q),
+            scale_dst.at[:, page_row[:n_copy]].set(srows))
 
 
 def adopt_slot_paged(pool: dict, cache, slot, length, page_row,
@@ -283,6 +405,11 @@ def adopt_slot_paged(pool: dict, cache, slot, length, page_row,
             "ssm": jax.lax.dynamic_update_slice_in_dim(
                 kv["ssm"], cache["ssm"].astype(kv["ssm"].dtype), slot,
                 axis=1)}
+    elif "k_scale" in kv:                          # int8 arena: quantize
+        new_kv = {}
+        for n in ("k", "v"):
+            new_kv[n], new_kv[n + "_scale"] = _copy_pages_quant(
+                kv[n], kv[n + "_scale"], cache[n], copy_row)
     else:
         new_kv = {n: _copy_pages(kv[n], cache[n], copy_row) for n in kv}
     return {"kv": new_kv,
@@ -310,6 +437,76 @@ def set_page_row(pool: dict, slot, page_row) -> dict:
     the allocator still considers free."""
     return {**pool, "page_table": pool["page_table"].at[slot].set(
         page_row.astype(jnp.int32))}
+
+
+def restore_slot_paged(pool: dict, blob, slot, length, page_row,
+                       copy_row=None) -> dict:
+    """Re-admit a demoted slot from its host-RAM page blob (the swap tier's
+    promote path).  ``blob`` is a dict matching the arena leaf names, each
+    leaf page-major ``[L, pages_per_slot, ps, ...]`` — exactly what
+    :meth:`HostSwapStore` captured at demotion, padded to the table width;
+    ``copy_row`` (default ``page_row``) routes the pad pages to the trash
+    page so the one compiled scatter covers every restored length.  The
+    scatter is a dtype-preserving copy of the demoted bytes (int8 pages and
+    fp32 scales included), so demote → restore is bit-lossless — unlike
+    preemption, which recomputes the prefix and, on a quantized pool,
+    requantizes it."""
+    if copy_row is None:
+        copy_row = page_row
+    new_kv = {n: pool["kv"][n].at[:, copy_row].set(
+        blob[n].astype(pool["kv"][n].dtype)) for n in pool["kv"]}
+    return {"kv": new_kv,
+            "page_table": pool["page_table"].at[slot].set(
+                page_row.astype(jnp.int32)),
+            "lengths": pool["lengths"].at[slot].set(
+                jnp.asarray(length, jnp.int32))}
+
+
+class HostSwapStore:
+    """Host-RAM store for demoted slots' pages (the swap tier's cold side).
+
+    The scheduler demotes a cold slot under page pressure by copying its
+    pages here (``np.asarray`` device pull — host-pinned buffers, exact
+    bytes, scale sidecars included) instead of preempting: promotion is a
+    scatter of the same bytes (:func:`restore_slot_paged`), not a prefill
+    recompute.  ``budget_bytes`` caps the store (None = unbounded); a
+    demote that would not fit is refused and the scheduler falls back to
+    preemption.  Blobs are keyed by request id."""
+
+    def __init__(self, budget_bytes: int | None = None):
+        self.budget_bytes = budget_bytes
+        self.bytes_used = 0
+        self._blobs: dict[int, dict] = {}
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._blobs
+
+    @staticmethod
+    def blob_bytes(blob: dict) -> int:
+        return sum(x.size * x.dtype.itemsize for x in blob.values())
+
+    def fits(self, nbytes: int) -> bool:
+        return (self.budget_bytes is None
+                or self.bytes_used + nbytes <= self.budget_bytes)
+
+    def put(self, rid: int, blob: dict) -> bool:
+        """Store ``rid``'s pages; False (nothing stored) if over budget."""
+        import numpy as np  # host copies only; jnp stays off this path
+
+        nbytes = self.blob_bytes(blob)
+        if rid in self._blobs or not self.fits(nbytes):
+            return False
+        self._blobs[rid] = {n: np.asarray(x) for n, x in blob.items()}
+        self.bytes_used += nbytes
+        return True
+
+    def pop(self, rid: int) -> dict:
+        blob = self._blobs.pop(rid)
+        self.bytes_used -= self.blob_bytes(blob)
+        return blob
 
 
 class PageAllocator:
@@ -412,23 +609,32 @@ def max_slots_in_budget(cfg: ModelConfig, max_len: int, budget_bytes: int,
 
 def paged_pool_bytes(cfg: ModelConfig, slots: int, max_len: int,
                      tp: int = 1, *, page_size: int | None = None,
-                     pages: int | None = None) -> int:
-    """Total bytes of a paged pool (arenas + page table + lengths)."""
+                     pages: int | None = None,
+                     page_dtype: str | None = None,
+                     scale_granularity: str | None = None) -> int:
+    """Total bytes of a paged pool (arenas + page table + lengths; on an
+    int8 pool the scale sidecars are counted too)."""
     pool = jax.eval_shape(lambda: init_paged_pool(
-        cfg, slots, max_len, tp, page_size=page_size, pages=pages))
+        cfg, slots, max_len, tp, page_size=page_size, pages=pages,
+        page_dtype=page_dtype, scale_granularity=scale_granularity))
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(pool))
 
 
 def max_pages_in_budget(cfg: ModelConfig, slots: int, max_len: int,
                         budget_bytes: int, tp: int = 1, *,
-                        page_size: int | None = None) -> int:
+                        page_size: int | None = None,
+                        page_dtype: str | None = None,
+                        scale_granularity: str | None = None) -> int:
     """Largest arena page count (trash page included) whose pool fits
     ``budget_bytes`` at the given slot count.  Pool bytes are affine in
-    the page count, so two shape evaluations determine the answer."""
-    one = paged_pool_bytes(cfg, slots, max_len, tp, page_size=page_size,
-                           pages=1)
-    two = paged_pool_bytes(cfg, slots, max_len, tp, page_size=page_size,
-                           pages=2)
+    the page count, so two shape evaluations determine the answer.  int8
+    pages (plus their scale rows) cost ~half the bytes of bf16 pages, so
+    the same budget buys ~2x the pages — the capacity half of the
+    quantization win."""
+    kw = dict(page_size=page_size, page_dtype=page_dtype,
+              scale_granularity=scale_granularity)
+    one = paged_pool_bytes(cfg, slots, max_len, tp, pages=1, **kw)
+    two = paged_pool_bytes(cfg, slots, max_len, tp, pages=2, **kw)
     per_page = max(1, two - one)
     fixed = one - per_page
     n = (budget_bytes - fixed) // per_page
@@ -437,7 +643,10 @@ def max_pages_in_budget(cfg: ModelConfig, slots: int, max_len: int,
 
 def paged_dims_in_budget(cfg: ModelConfig, max_len: int, budget_bytes: int,
                          tp: int = 1, *, page_size: int,
-                         avg_tokens: int) -> tuple[int, int]:
+                         avg_tokens: int,
+                         page_dtype: str | None = None,
+                         scale_granularity: str | None = None
+                         ) -> tuple[int, int]:
     """(slots, pages) for a paged pool under ``budget_bytes``: the budget
     buys PAGES; the slot count is sized for ``avg_tokens``-token requests
     (concurrency = usable page tokens / avg request tokens) — the
@@ -445,11 +654,13 @@ def paged_dims_in_budget(cfg: ModelConfig, max_len: int, budget_bytes: int,
     than ``max_len`` strips at the same byte budget.  Slot metadata
     (page-table rows, hybrid ssm state) also costs bytes, so the pair is
     solved by a short fixed-point iteration."""
+    kw = dict(page_size=page_size, page_dtype=page_dtype,
+              scale_granularity=scale_granularity)
     slots = 1
     pages = 0
     for _ in range(4):
         pages = max_pages_in_budget(cfg, slots, max_len, budget_bytes, tp,
-                                    page_size=page_size)
+                                    **kw)
         if pages < 2:
             break
         new_slots = max(1, ((pages - 1) * page_size) // max(1, avg_tokens))
@@ -460,5 +671,5 @@ def paged_dims_in_budget(cfg: ModelConfig, max_len: int, budget_bytes: int,
         # iteration cap hit with slots just grown: re-fit pages to the
         # final slot count so the pool stays within budget
         pages = max_pages_in_budget(cfg, slots, max_len, budget_bytes, tp,
-                                    page_size=page_size)
+                                    **kw)
     return slots, pages

@@ -171,7 +171,10 @@ class ContinuousBatchingEngine:
                  moe_impl: str = "dispatch", paged: bool | str = "auto",
                  page_size: int | None = None, pages: int | None = None,
                  prefill_buckets="auto", avg_tokens_hint: int | None = None,
-                 prefix_cache: bool | str = "auto", mesh=None):
+                 prefix_cache: bool | str = "auto", mesh=None,
+                 page_dtype: str | None = None,
+                 scale_granularity: str | None = None,
+                 host_swap_bytes: int | None = None):
         cfg = model.cfg
         self.mesh = mesh
         if cfg.family == "encdec":
@@ -184,8 +187,23 @@ class ContinuousBatchingEngine:
             raise ValueError(f"family {cfg.family!r} has no pageable cache")
         self.paged = bool(paged)
         self.max_len = int(max_len)
-        self.page_size = (kv_cache.resolve_page_size(cfg, max_len, page_size)
-                          if self.paged else None)
+        self.page_dtype = page_dtype
+        self.scale_granularity: str | None = None
+        if page_dtype is not None:
+            if not self.paged:
+                raise ValueError(
+                    "page_dtype needs a paged pool (the slot-strip pool "
+                    "stays full-precision)")
+            if not kv_cache.supports_page_quant(cfg):
+                raise ValueError(
+                    f"family {cfg.family!r} has no quantizable page arena "
+                    "(mla latents and hybrid ssm state keep full precision)")
+            self.page_size, self.scale_granularity = kv_cache.\
+                resolve_page_quant(cfg, max_len, page_size, scale_granularity)
+        else:
+            self.page_size = (kv_cache.resolve_page_size(cfg, max_len,
+                                                         page_size)
+                              if self.paged else None)
 
         if slots is None:
             if memory_budget_bytes is None:
@@ -200,7 +218,9 @@ class ContinuousBatchingEngine:
                 slots, pages = kv_cache.paged_dims_in_budget(
                     cfg, max_len, memory_budget_bytes, model.tp,
                     page_size=self.page_size,
-                    avg_tokens=avg_tokens_hint or max(1, max_len // 2))
+                    avg_tokens=avg_tokens_hint or max(1, max_len // 2),
+                    page_dtype=page_dtype,
+                    scale_granularity=self.scale_granularity)
                 if slots < 1 or pages < 2:
                     raise ValueError(
                         f"memory budget {memory_budget_bytes} fits no usable "
@@ -233,7 +253,9 @@ class ContinuousBatchingEngine:
                 pages = 1 + self.n_slots * self.pages_per_slot
             self.pool = kv_cache.init_paged_pool(
                 cfg, self.n_slots, self.max_len, model.tp,
-                page_size=self.page_size, pages=int(pages), mesh=mesh)
+                page_size=self.page_size, pages=int(pages), mesh=mesh,
+                page_dtype=page_dtype,
+                scale_granularity=self.scale_granularity)
             self.allocator = kv_cache.PageAllocator(int(pages))
             self.slot_pages: list[list[int]] = [[] for _ in
                                                 range(self.n_slots)]
@@ -242,6 +264,22 @@ class ContinuousBatchingEngine:
                                                 self.max_len, model.tp)
             if mesh is not None:
                 self.pool = kv_cache.shard_pool(self.pool, cfg, mesh)
+
+        # host-RAM swap tier: under page pressure a cold slot's pages move
+        # to host RAM (bit-exact, scale sidecars included) instead of being
+        # preempted-and-recomputed; promotion scatters them back.  See
+        # _demote / _promote_swapped.
+        self.host_swap: kv_cache.HostSwapStore | None = None
+        self._swapped: dict[int, dict] = {}
+        if host_swap_bytes is not None:
+            if not self.paged:
+                raise ValueError("host_swap_bytes needs a paged pool")
+            if cfg.family == "hybrid":
+                raise ValueError(
+                    "host swap does not cover the hybrid family: its "
+                    "recurrent ssm state is slot-major, not paged, and "
+                    "would be lost at demotion")
+            self.host_swap = kv_cache.HostSwapStore(int(host_swap_bytes))
 
         self.buckets = self._resolve_buckets(prefill_buckets)
         self._moe_impl = moe_impl
@@ -302,6 +340,8 @@ class ContinuousBatchingEngine:
                 jax.jit(kv_cache.free_slot_paged, **pool_kw))
             self._set_row = self._with_mesh(
                 jax.jit(kv_cache.set_page_row, **pool_kw))
+            self._restore = self._with_mesh(
+                jax.jit(kv_cache.restore_slot_paged, **pool_kw))
         else:
             self._adopt = self._with_mesh(
                 jax.jit(kv_cache.adopt_slot, **pool_kw))
@@ -322,7 +362,8 @@ class ContinuousBatchingEngine:
         self.stats = dict(prefill_tokens=0, prefill_s=0.0, decode_tokens=0,
                           decode_s=0.0, steps=0, admitted=0, preempted=0,
                           peak_pages=0, prefix_hits=0, prefix_tokens_reused=0,
-                          cow_copies=0, prefix_evictions=0)
+                          cow_copies=0, prefix_evictions=0, demoted=0,
+                          prefetched=0)
 
     # -- mesh plumbing -------------------------------------------------------
     def _with_mesh(self, fn):
@@ -635,6 +676,12 @@ class ContinuousBatchingEngine:
 
     def _admit_arrived(self, now: float) -> None:
         free = self.free_slots()
+        # promote swapped-out work before admitting anything new: a demotee
+        # resumes with a byte scatter, a fresh request costs a prefill
+        while free and self._swapped:
+            if not self._promote_swapped(free[0], now):
+                break                        # no pages yet: keep waiting
+            free = self.free_slots()
         while free and self.pending and self.pending[0].arrival_s <= now:
             if not self._admit(self.pending[0], free[0], now):
                 break                        # no pages: wait for retirements
@@ -701,6 +748,65 @@ class ContinuousBatchingEngine:
         return max((self.slot_owner[s].seq, s)
                    for s in self.active_slots())[1]
 
+    # -- host-RAM swap tier --------------------------------------------------
+    def _demote(self, slot: int, now: float) -> bool:
+        """Swap ``slot``'s pages to host RAM instead of preempting: the
+        exact arena bytes (int8 pages + fp32 scale sidecars included) move
+        to the :class:`kv_cache.HostSwapStore`; promotion scatters the same
+        bytes back (``restore_slot_paged``), so the round trip is
+        bit-lossless — no prefill recompute and, on a quantized pool, no
+        second quantization error.  Refuses (caller falls back to
+        ``_preempt``) when the tier is off, any of the slot's pages is
+        SHARED (refcount > 1: another slot or the prefix index still reads
+        it — the bytes must stay resident), or the blob is over the host
+        budget."""
+        if self.host_swap is None:
+            return False
+        ids = self.slot_pages[slot]
+        if not ids or any(self.allocator.refcount(p) > 1 for p in ids):
+            return False
+        comp = self.slot_owner[slot]
+        # constant-shape gather: pads go through the trash page, whose
+        # garbage bytes are routed straight back to it at promotion
+        row = self._page_row(slot)
+        blob = {n: jax.device_get(leaf[:, row])
+                for n, leaf in self.pool["kv"].items()}
+        if not self.host_swap.put(comp.rid, blob):
+            return False
+        self._swapped[comp.rid] = dict(
+            comp=comp, req=self.slot_req[slot],
+            length=comp.prompt_len + len(comp.tokens) - 1,
+            next_tok=int(self.next_tok[slot]))
+        self._release_slot(slot)
+        self.stats["demoted"] += 1
+        return True
+
+    def _promote_swapped(self, slot: int, now: float) -> bool:
+        """Promote the oldest swapped-out request back into ``slot`` (FIFO
+        — the longest-waiting demotee resumes first): re-allocate its
+        pages, scatter the host blob back bit-for-bit, resume decode at the
+        token it was about to write.  False (nothing consumed) while the
+        arena cannot back it."""
+        rid, ent = next(iter(self._swapped.items()))
+        need = self._pages_for(ent["length"])
+        page_ids = self._alloc_pages(need)
+        if page_ids is None:
+            return False
+        del self._swapped[rid]
+        blob = self.host_swap.pop(rid)
+        self.slot_pages[slot] = page_ids
+        self.pool = self._restore(self.pool, blob, np.int32(slot),
+                                  np.int32(ent["length"]),
+                                  self._page_row(slot))
+        self._note_peak()
+        comp = ent["comp"]
+        comp.slot = slot
+        self.slot_owner[slot] = comp
+        self.slot_req[slot] = ent["req"]
+        self.next_tok[slot] = ent["next_tok"]
+        self.stats["prefetched"] += 1
+        return True
+
     def _ensure_pages(self, runahead: int, now: float) -> int:
         """Make every active slot's next ``h <= runahead`` write positions
         page-backed before the decode burst.  Shrinks the horizon before
@@ -753,7 +859,12 @@ class ContinuousBatchingEngine:
                 self.completions.append(comp)
                 self._release_slot(active[0])
                 return 0
-            self._preempt(self._pick_victim(), now)
+            # demotion first: host swap keeps the victim's computed pages
+            # (promote = byte scatter); preemption throws them away
+            # (readmission = full prefill recompute)
+            victim = self._pick_victim()
+            if not self._demote(victim, now):
+                self._preempt(victim, now)
 
     # -- one scheduler iteration --------------------------------------------
     def _runahead(self, comps: list[Completion]) -> int:
@@ -786,7 +897,7 @@ class ContinuousBatchingEngine:
             runahead = self._ensure_pages(runahead, now)
             active = self.active_slots()     # preemption may have shrunk it
             if not active:
-                return bool(self.pending)
+                return bool(self.pending or self._swapped)
         mask = np.zeros((self.n_slots,), bool)
         mask[active] = True
 
@@ -834,7 +945,7 @@ class ContinuousBatchingEngine:
                 req.arrival_s = 0.0
         start = time.perf_counter()
         self._run_start = start
-        while self.pending or self.active_slots():
+        while self.pending or self.active_slots() or self._swapped:
             now = (time.perf_counter() - start) if use_wall_clock else 0.0
             progressed = self.step(now=now)
             if not progressed and self.pending:
@@ -880,6 +991,13 @@ class ContinuousBatchingEngine:
                        peak_pages=st["peak_pages"],
                        preempted=st["preempted"],
                        prefix_cache=self.prefix_cache is not None)
+            if self.page_dtype is not None:
+                out.update(page_dtype=self.page_dtype,
+                           scale_granularity=self.scale_granularity)
+            if self.host_swap is not None:
+                out.update(demoted=st["demoted"],
+                           prefetched=st["prefetched"],
+                           swap_bytes_used=self.host_swap.bytes_used)
             if self.prefix_cache is not None:
                 out.update(prefix_hits=st["prefix_hits"],
                            prefix_tokens_reused=st["prefix_tokens_reused"],
