@@ -31,6 +31,8 @@ SHAPES = (
     ("decode_attention", 8, 4096),     # rows/cols = slots / cache positions
     ("decode_attention_paged", 8, 4096),
     ("kv_page_quant", 2, 4096),        # rows/cols = kv heads / positions
+    ("flash_attention_bwd", 128, 256),  # rows/cols = Sq / Skv
+    ("lmhead_xent", 128, 4096),        # rows/cols = tokens / vocab
 )
 
 FAST_SHAPES = (
@@ -41,6 +43,8 @@ FAST_SHAPES = (
     ("decode_attention", 8, 512),
     ("decode_attention_paged", 8, 512),
     ("kv_page_quant", 2, 512),
+    ("flash_attention_bwd", 128, 128),
+    ("lmhead_xent", 32, 512),
 )
 
 # CI smoke: one candidate apiece — proves sweep/persist/hit without timing
@@ -51,6 +55,8 @@ SMOKE_SHAPES = (
     ("decode_attention", 8, 256),
     ("decode_attention_paged", 8, 256),
     ("kv_page_quant", 2, 256),
+    ("flash_attention_bwd", 128, 128),
+    ("lmhead_xent", 8, 256),
 )
 
 

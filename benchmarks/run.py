@@ -15,6 +15,10 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   serving_throughput  — beyond-paper: continuous-batching scheduler (paged
                         KV pool) vs the static-batch generate loop and the
                         strip pool (req/s, phase tok/s, memory ratio)
+  train_step_bench    — beyond-paper: full train step (fwd+bwd+AdamW),
+                        kernel backward (flash dq/dk/dv from saved (m, n)
+                        stats + fused LM-head CE) vs the reference VJP,
+                        gradients parity-checked before timing
 
 ``--json out.json`` additionally dumps every emitted metric as one JSON
 object — the input of ``scripts/check_bench.py``, the CI benchmark
@@ -50,7 +54,7 @@ def main() -> None:
                             common, decode_attention_bench, fused_xent,
                             library_comparison, memory_traffic,
                             pass_decomposition, serving_throughput,
-                            softmax_sweep)
+                            softmax_sweep, train_step_bench)
 
     # One table, three grids per bench: (full_kwargs, fast_kwargs,
     # smoke_kwargs).  A single dict means a new benchmark can't be added to
@@ -102,6 +106,13 @@ def main() -> None:
             # workload and must emit identical tokens (CI acceptance)
             dict(n_requests=6, slots_list=(4,), prompt_len=8, max_new=8,
                  max_len=64, kernel_lane=True)),
+        "train_step_bench": (
+            train_step_bench.run,
+            dict(batch=2, seq=512, vocab=8192, d_model=128),
+            dict(batch=2, seq=256, vocab=4096, d_model=128),
+            # gradients parity-check before timing (raises on violation);
+            # the kernel_vs_reference ratio is the CI-gated acceptance
+            dict(batch=1, seq=128, vocab=2048, d_model=64)),
     }
     if args.smoke:
         common.smoke_mode()

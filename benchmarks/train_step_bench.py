@@ -1,0 +1,190 @@
+"""Beyond-paper: training-step throughput — kernel backward vs reference VJP.
+
+The training fast path (PR 9) routes the two hot backward ops through the
+registry: flash-attention dq/dk/dv recomputed from the forward's saved
+(m, n) statistics, and the fused LM-head CE whose backward streams vocab
+tiles (logits recomputed per tile, the [T, V] gradient never materialized).
+This bench times one full jitted ``train_step`` (fwd + bwd + AdamW) over a
+small dense model in both modes:
+
+  reference — ``use_kernels=False``: materialized-score attention under
+              jnp-autodiff, checkpointed chunked LM-head CE (the jnp
+              reference VJP path every PR before this one trained with),
+  kernel    — ``use_kernels=True``: the differentiable ``flash_attention``
+              + ``lmhead_cross_entropy`` registry ops (Pallas on TPU, the
+              jnp chunked (m, n) forms on CPU — the same dispatch serving
+              uses, so CPU rows time a real production path, not interpret
+              mode).
+
+Gradients are parity-checked between the two modes before any timing (max
+elementwise error vs reference, tolerance 1e-4 — documented in
+docs/kernels.md); a violation raises, so a red lane means wrong gradients,
+not just slow ones.  ``train_step/kernel_vs_reference`` is the CI-gated
+ratio (higher is better; acceptance floor 1.2x).  Micro rows time the two
+backward ops in isolation (``value_and_grad`` of each op, reference impl
+vs the backend's production impl) so a regression localizes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+# Gradient parity tolerance (max |kernel - reference| over every leaf,
+# f32 accumulation in both paths; see docs/kernels.md "oracles").
+PARITY_ATOL = 1e-4
+
+
+def _build(batch: int, seq: int, vocab: int, d_model: int):
+    from repro.models.model_zoo import build_model
+
+    kw = dict(reduced=True, vocab=vocab, d_model=d_model,
+              n_heads=4, n_kv_heads=2, head_dim=max(16, d_model // 8),
+              d_ff=2 * d_model)
+    m_ref = build_model("qwen2.5-14b", **kw)
+    m_ker = build_model("qwen2.5-14b", use_kernels=True, **kw)
+    params = m_ref.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (batch, seq + 1),
+                                0, vocab)
+    return m_ref, m_ker, params, {"tokens": tokens}
+
+
+def _check_parity(m_ref, m_ker, params, batch) -> float:
+    """Max gradient error, kernel vs reference path.  Raises on violation
+    — the speed rows below are meaningless if the gradients are wrong."""
+    g_ref = jax.jit(jax.grad(lambda p: m_ref.loss(p, batch)))(params)
+    g_ker = jax.jit(jax.grad(lambda p: m_ker.loss(p, batch)))(params)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_ref, g_ker)))
+    if not err < PARITY_ATOL:
+        raise AssertionError(
+            f"kernel-backward gradients diverge from the reference VJP: "
+            f"max err {err:.2e} > {PARITY_ATOL:.0e}")
+    return err
+
+
+def _step_time(model, params, batch) -> float:
+    from repro.optim import adamw
+    from repro.training.step_fn import make_train_step
+    from repro.training.train_state import TrainState
+
+    state = TrainState(params, adamw.init(params))
+    step = jax.jit(make_train_step(model))
+    return common.time_fn(lambda: step(state, batch))
+
+
+def _micro_flash(seq: int) -> list[tuple]:
+    """flash-attention fwd+bwd in isolation: reference VJP vs the backend's
+    production implementation of the ``flash_attention_bwd`` registry op."""
+    from repro.kernels import ops
+    from repro.kernels.autotune import ATTN_HEAD_DIM, ATTN_HEADS
+
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    shape = (1, ATTN_HEADS, seq, ATTN_HEAD_DIM)
+    q, k, v, do = (jax.random.normal(k_, shape, jnp.float32) for k_ in ks)
+
+    def grads(impl):
+        def f(q_, k_, v_):
+            return jnp.vdot(ops.flash_attention(
+                q_, k_, v_, True, None, None, None, None, None, impl), do)
+        return jax.jit(jax.grad(f, argnums=(0, 1, 2)))
+
+    impl = ops._train_backend_impl()
+    g_ref, g_ker = grads("ref"), grads(impl)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(g_ref(q, k, v), g_ker(q, k, v)))
+    assert err < PARITY_ATOL, f"flash_bwd parity: {err:.2e}"
+    t_ref = common.time_fn(lambda: g_ref(q, k, v))
+    t_ker = common.time_fn(lambda: g_ker(q, k, v))
+    return [
+        (f"flash_bwd/s={seq}/ref_us", round(t_ref * 1e6, 1), ""),
+        (f"flash_bwd/s={seq}/kernel_us", round(t_ker * 1e6, 1), impl),
+        (f"flash_bwd/s={seq}/kernel_vs_ref", round(t_ref / t_ker, 3),
+         "higher=better"),
+    ]
+
+
+def _micro_lmhead(tokens: int, vocab: int, d: int) -> list[tuple]:
+    """fused LM-head CE fwd+bwd in isolation: reference VJP (materialized
+    logits) vs the backend's production ``lmhead_xent`` implementation."""
+    from repro.kernels import ops
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    h = jax.random.normal(ks[0], (tokens, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, vocab), jnp.float32) * 0.05
+    labels = jax.random.randint(ks[2], (tokens,), 0, vocab)
+
+    def grads(impl):
+        def f(h_, w_):
+            return jnp.sum(ops.lmhead_cross_entropy(
+                h_, w_, labels, None, None, None, impl))
+        return jax.jit(jax.grad(f, argnums=(0, 1)))
+
+    impl = ops._train_backend_impl()
+    g_ref, g_ker = grads("ref"), grads(impl)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(g_ref(h, w), g_ker(h, w)))
+    assert err < PARITY_ATOL, f"lmhead_bwd parity: {err:.2e}"
+    t_ref = common.time_fn(lambda: g_ref(h, w))
+    t_ker = common.time_fn(lambda: g_ker(h, w))
+    return [
+        (f"lmhead_bwd/t={tokens}/v={vocab}/ref_us",
+         round(t_ref * 1e6, 1), ""),
+        (f"lmhead_bwd/t={tokens}/v={vocab}/kernel_us",
+         round(t_ker * 1e6, 1), impl),
+        (f"lmhead_bwd/t={tokens}/v={vocab}/kernel_vs_ref",
+         round(t_ref / t_ker, 3), "higher=better"),
+    ]
+
+
+def run(batch: int = 2, seq: int = 512, vocab: int = 8192,
+        d_model: int = 128, micro: bool = True) -> list[tuple]:
+    m_ref, m_ker, params, data = _build(batch, seq, vocab, d_model)
+    err = _check_parity(m_ref, m_ker, params, data)
+    t_ref = _step_time(m_ref, params, data)
+    t_ker = _step_time(m_ker, params, data)
+    rows = [
+        (f"train_step/b={batch}/s={seq}/v={vocab}/reference_us",
+         round(t_ref * 1e6, 1), ""),
+        (f"train_step/b={batch}/s={seq}/v={vocab}/kernel_us",
+         round(t_ker * 1e6, 1), f"parity_err={err:.1e}"),
+        (f"train_step/b={batch}/s={seq}/v={vocab}/kernel_vs_reference",
+         round(t_ref / t_ker, 3), "higher=better"),
+    ]
+    if micro:
+        rows += _micro_flash(seq)
+        rows += _micro_lmhead(min(256, batch * seq), vocab, d_model)
+    return common.emit(rows)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny model, median-of-3 (the train-smoke CI lane)")
+    p.add_argument("--fast", action="store_true", help="reduced shapes")
+    p.add_argument("--json", default=None, metavar="OUT",
+                   help="write metrics JSON (scripts/check_bench.py input)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        common.smoke_mode()
+        rows = run(batch=1, seq=128, vocab=2048, d_model=64)
+    elif args.fast:
+        rows = run(batch=2, seq=256, vocab=4096, d_model=128)
+    else:
+        rows = run()
+    if args.json:
+        mode = "smoke" if args.smoke else ("fast" if args.fast else "full")
+        metrics = {"train_step_bench":
+                   {r[0]: float(r[1]) for r in rows}}
+        with open(args.json, "w") as f:
+            json.dump(common.json_payload(metrics, mode), f, indent=2,
+                      sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

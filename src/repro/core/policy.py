@@ -39,7 +39,7 @@ from repro.core.softmax_api import _ALGOS, SoftmaxAlgorithm
 # decode_attention_paged shares that layout with cols = logical positions
 # (page-table width * page size).
 ATTENTION_OPS = ("flash_attention", "chunk_attention", "decode_attention",
-                 "decode_attention_paged")
+                 "decode_attention_paged", "flash_attention_bwd")
 
 
 @dataclass(frozen=True)
@@ -152,6 +152,20 @@ class SoftmaxPolicy:
                                  labels[:, None].astype(jnp.int32),
                                  axis=-1)[:, 0]
         return lse - ll
+
+    def lmhead_cross_entropy(self, h: jax.Array, w: jax.Array,
+                             labels: jax.Array) -> jax.Array:
+        """Fused LM-head CE ([T, D] @ [D, V] vs [T] -> [T]) — neither the
+        logits nor their gradient materialize whole on the kernel path
+        (both passes of fwd AND bwd recompute per vocab tile from the
+        saved (m, n) statistics; see ops.lmhead_cross_entropy).  Without
+        kernels: materialized f32 logits through :meth:`cross_entropy`."""
+        if self.use_kernels:
+            from repro.kernels import ops  # lazy
+
+            return ops.lmhead_cross_entropy(h, w, labels, None, None, self)
+        logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+        return self.cross_entropy(logits, labels)
 
 
 DEFAULT_POLICY = SoftmaxPolicy()

@@ -161,6 +161,37 @@ def _runner_for(op: str) -> Callable:
                                               k_scale=ksc, v_scale=vsc,
                                               use_kernel=uk)
         return run
+    if op == "flash_attention_bwd":
+        # training backward: dq/dk/dv recomputed from the forward's saved
+        # (m, n) statistics.  Times the implementation the training step
+        # actually runs on this backend (decode_kernel_path): the Pallas
+        # tile kernels on TPU, the jnp chunked (m, n) forms elsewhere —
+        # interpret-mode timings would tune the wrong implementation.
+        impl = "pallas" if decode_kernel_path() else "twopass"
+
+        def run(args, br, bc):
+            q, k, v, o, m_sum, n_sum, do = args
+            return ops.flash_attention_bwd(q, k, v, o, m_sum, n_sum, do,
+                                           causal=True, block_q=br,
+                                           block_k=bc, impl=impl)
+        return run
+    if op == "lmhead_xent":
+        # fused LM-head CE: what a tile choice trades off is fwd+bwd vocab
+        # recompute vs working-set size, so the timed unit is a full
+        # value_and_grad step at the candidate blocks (jitted per
+        # candidate, cached outside the timed region).
+        impl = "pallas" if decode_kernel_path() else "twopass"
+        prepped: dict = {}
+
+        def run(args, br, bc):
+            h, w, labels = args
+            if (br, bc) not in prepped:
+                prepped[(br, bc)] = jax.jit(jax.value_and_grad(
+                    lambda h_, w_: jnp.sum(ops.lmhead_cross_entropy(
+                        h_, w_, labels, br, bc, None, impl)),
+                    argnums=(0, 1)))
+            return prepped[(br, bc)](h, w)
+        return run
     if op == "chunk_attention":
         # chunked-jnp path: blocks are chunk LENGTHS; counts are the same
         # ceil-div + unroll clamp models.attention.resolve_chunks applies.
@@ -258,6 +289,29 @@ def _inputs_for(op: str, rows: int, cols: int, dtype):
             kvs = (1, ATTN_HEADS, cols, d)
         return tuple(jax.random.normal(k_, s).astype(dtype)
                      for k_, s in zip(ks, (qs, kvs, kvs)))
+    if op == "flash_attention_bwd":
+        # rows/cols are (Sq, Skv); the backward consumes the forward's
+        # residuals, so the stats are precomputed here (outside the timed
+        # region) by the backend's own stats-saving forward.
+        from repro.kernels import ops
+
+        ks = jax.random.split(key, 4)
+        d = ATTN_HEAD_DIM
+        q = jax.random.normal(ks[0], (1, ATTN_HEADS, rows, d)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, ATTN_HEADS, cols, d)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, ATTN_HEADS, cols, d)).astype(dtype)
+        do = jax.random.normal(ks[3], (1, ATTN_HEADS, rows, d)).astype(dtype)
+        o, m_sum, n_sum = ops.flash_attention_fwd_stats(q, k, v, causal=True)
+        return (q, k, v, o, m_sum, n_sum, do)
+    if op == "lmhead_xent":
+        # rows/cols are (tokens, vocab); the hidden dim is a fixed proxy —
+        # the tile choice is driven by the token/vocab grid.
+        ks = jax.random.split(key, 2)
+        h = jax.random.normal(ks[0], (rows, 2 * ATTN_HEAD_DIM)).astype(dtype)
+        w = (jax.random.normal(ks[1], (2 * ATTN_HEAD_DIM, cols)) * 0.1
+             ).astype(dtype)
+        labels = jax.random.randint(jax.random.PRNGKey(1), (rows,), 0, cols)
+        return (h, w, labels)
     x = (jax.random.normal(key, (rows, cols)) * 4).astype(dtype)
     if op == "xent":
         labels = jax.random.randint(jax.random.PRNGKey(1), (rows,), 0, cols)
@@ -330,6 +384,10 @@ DEFAULT_SWEEP = (
     # int8 page layout (rows = kv heads, cols = cache positions): sweeps
     # page size x scale granularity under the fused-dequant decode
     ("kv_page_quant", 2, 4096),
+    # training backward: flash dq/dk/dv from saved stats (rows/cols=Sq/Skv)
+    ("flash_attention_bwd", 128, 256),
+    # fused LM-head CE fwd+bwd (rows/cols = tokens/vocab)
+    ("lmhead_xent", 128, 4096),
 )
 
 
@@ -337,10 +395,12 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--op", default=None,
                    help="softmax|logsumexp|xent|flash_attention|"
+                        "flash_attention_bwd|"
                         "chunk_attention (rows/cols = Sq/Skv)|"
                         "decode_attention (rows/cols = slots/Skv)|"
                         "kv_page_quant (rows/cols = kv heads/positions; "
-                        "always swept at int8)")
+                        "always swept at int8)|"
+                        "lmhead_xent (rows/cols = tokens/vocab)")
     p.add_argument("--rows", type=int, default=64)
     p.add_argument("--cols", type=int, default=4096)
     p.add_argument("--dtype", default="float32")

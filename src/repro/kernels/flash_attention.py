@@ -29,20 +29,15 @@ from repro.kernels.twopass_softmax import _interpret, _tpu_params
 NEG_INF = -jnp.inf
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, n_ref, *,
-                scale: float, causal: bool, window: int | None,
-                block_q: int, block_k: int, sq: int, skv: int,
-                q_len: int, kv_len: int):
-    i = pl.program_id(1)
-    j = pl.program_id(2)
-
-    q = q_ref[0].astype(jnp.float32)                 # (BQ, D)
-    k = k_ref[0].astype(jnp.float32)                 # (BK, D)
-    v = v_ref[0].astype(jnp.float32)                 # (BK, D)
-
+def _masked_scores(q, k, i, j, *, scale: float, causal: bool,
+                   window: int | None, block_q: int, block_k: int,
+                   skv: int, q_len: int, kv_len: int):
+    """QK^T for one (i, j) tile with the causal/window/padding mask applied.
+    Shared by the forward and both backward kernels so the masked entries'
+    (m=0, n=-inf) pairs — and therefore the recomputed probabilities — are
+    bit-identical across passes."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-
     if causal or window is not None or kv_len != skv:
         qpos = (i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
                 + (kv_len - q_len))                  # align sequence ends
@@ -55,6 +50,23 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, n_ref, *,
         if kv_len != skv:                            # end-padding is invalid
             mask &= kpos < kv_len
         s = jnp.where(mask, s, NEG_INF)
+    return s
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, n_ref, *,
+                scale: float, causal: bool, window: int | None,
+                block_q: int, block_k: int, sq: int, skv: int,
+                q_len: int, kv_len: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    q = q_ref[0].astype(jnp.float32)                 # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                 # (BK, D)
+    v = v_ref[0].astype(jnp.float32)                 # (BK, Dv)
+
+    s = _masked_scores(q, k, i, j, scale=scale, causal=causal,
+                       window=window, block_q=block_q, block_k=block_k,
+                       skv=skv, q_len=q_len, kv_len=kv_len)
 
     m, n = ext_exp(s)                                # (BQ, BK) pairs
     n_loc = jnp.max(n, axis=-1, keepdims=True)       # (BQ, 1)
@@ -81,30 +93,38 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, n_ref, *,
 
     @pl.when(j == skv // block_k - 1)
     def _normalize():
-        o_ref[0] = o_ref[0] / m_ref[0]
+        # fully-masked rows (m_sum = 0: causal rows with qpos < 0 under
+        # ragged Sq > Skv, or padding) normalize to exact zeros, not 0/0
+        o_ref[0] = o_ref[0] / jnp.maximum(m_ref[0], 1e-37)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "scale", "window", "block_q", "block_k",
                      "q_len", "kv_len"))
-def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                        causal: bool = False, scale: float | None = None,
-                        window: int | None = None,
-                        block_q: int | None = None,
-                        block_k: int | None = None,
-                        q_len: int | None = None,
-                        kv_len: int | None = None) -> jax.Array:
-    """Flash attention, q/k/v: [B, H, S, D] (H pre-expanded to q-heads).
+def flash_attention_fwd_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = False,
+                            scale: float | None = None,
+                            window: int | None = None,
+                            block_q: int | None = None,
+                            block_k: int | None = None,
+                            q_len: int | None = None,
+                            kv_len: int | None = None):
+    """Flash attention forward, q/k/v: [B, H, S, D] (H pre-expanded to
+    q-heads); v may carry a different feature dim Dv.
 
     ``block_q``/``block_k`` default to the registry's resolution for
     ``flash_attention`` (heuristic MXU tile unless overridden/tuned).
     Sq % block_q == Skv % block_k == 0 required (``ops.flash_attention``
     pads; ``q_len``/``kv_len`` are the true pre-padding lengths).
-    Returns [B, H, Sq, D] in q.dtype.
+
+    Returns ``(o, m_sum, n_sum)``: o [B, H, Sq, Dv] in q.dtype plus the
+    per-row softmax-denominator statistics [B, H, Sq, 1] f32 — the saved
+    state :func:`flash_attention_bwd_gqa` recomputes probabilities from.
     """
     b, h, sq, d = q.shape
     skv = k.shape[2]
+    dv = v.shape[3]
     if block_q is None or block_k is None:
         rq, rk = registry.block_shapes("flash_attention", sq, skv, q.dtype)
         block_q = block_q or min(rq, sq)
@@ -120,7 +140,7 @@ def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
     g = b * h
     qf = q.reshape(g, sq, d)
     kf = k.reshape(g, skv, d)
-    vf = v.reshape(g, skv, d)
+    vf = v.reshape(g, skv, dv)
     grid = (g, sq // block_q, skv // block_k)
 
     kernel = functools.partial(
@@ -134,15 +154,15 @@ def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda g_, i, j: (g_, i, 0)),
             pl.BlockSpec((1, block_k, d), lambda g_, i, j: (g_, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda g_, i, j: (g_, j, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda g_, i, j: (g_, j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, block_q, d), lambda g_, i, j: (g_, i, 0)),
+            pl.BlockSpec((1, block_q, dv), lambda g_, i, j: (g_, i, 0)),
             pl.BlockSpec((1, block_q, 1), lambda g_, i, j: (g_, i, 0)),
             pl.BlockSpec((1, block_q, 1), lambda g_, i, j: (g_, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((g, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((g, sq, dv), jnp.float32),
             jax.ShapeDtypeStruct((g, sq, 1), jnp.float32),
             jax.ShapeDtypeStruct((g, sq, 1), jnp.float32),
         ],
@@ -150,4 +170,216 @@ def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
         **_tpu_params(("parallel", "parallel", "arbitrary")),
     )(qf, kf, vf)
 
-    return o.reshape(b, h, sq, d).astype(q.dtype)
+    return (o.reshape(b, h, sq, dv).astype(q.dtype),
+            m_sum.reshape(b, h, sq, 1), n_sum.reshape(b, h, sq, 1))
+
+
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array,
+                        **kw) -> jax.Array:
+    """Output-only forward (see :func:`flash_attention_fwd_gqa`)."""
+    o, _, _ = flash_attention_fwd_gqa(q, k, v, **kw)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Backward: recompute-style dq/dk/dv against the forward's saved (m, n).
+#
+# Standard flash backward re-runs the online softmax per tile; here the
+# forward's ``(m_sum, n_sum)`` pair IS the softmax denominator in the
+# paper's extended-exponent representation, so each tile reconstructs its
+# probabilities in closed form — ``p = m * 2^(n - n_sum) / m_sum`` with the
+# 2^k rescale an exact exponent-field shift (``exp2_int``), no running
+# maxima, no order sensitivity.  With ``delta = rowsum(do * o)``:
+#
+#   dp = do @ v^T          ds = p * (dp - delta) * scale
+#   dq = ds @ k            dk = ds^T @ q            dv = p^T @ do
+#
+# dq accumulates over KV tiles and dk/dv over Q tiles; Pallas revisited
+# outputs only persist across *consecutive* grid steps, so the two
+# accumulation orders need separate kernels: dq sweeps (g, i, j) with KV
+# innermost, dk/dv sweep (g, j, i) with Q innermost.
+# ---------------------------------------------------------------------------
+def _recomputed_p_ds(q, k, v, do, delta, m_sum, n_sum, i, j, *,
+                     scale, causal, window, block_q, block_k,
+                     skv, q_len, kv_len):
+    """(p, ds) for one (i, j) tile.  Masked entries have m = 0 from ExtExp,
+    so p — and everything downstream — is exactly zero there; no second
+    mask application is needed."""
+    s = _masked_scores(q, k, i, j, scale=scale, causal=causal,
+                       window=window, block_q=block_q, block_k=block_k,
+                       skv=skv, q_len=q_len, kv_len=kv_len)
+    m, n = ext_exp(s)
+    # Fully-masked rows (m_sum = 0) recover exact zeros, not NaN: the guard
+    # mirrors the jnp (m, n) sweeps in ops.py.
+    inv = 1.0 / jnp.maximum(m_sum, 1e-37)            # (BQ, 1)
+    p = m * exp2_int(n - n_sum) * inv                # (BQ, BK)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * scale                    # (BQ, BK)
+    return p, ds
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, m_ref, n_ref,
+                   dq_ref, *, scale: float, causal: bool,
+                   window: int | None, block_q: int, block_k: int,
+                   skv: int, q_len: int, kv_len: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)                             # KV innermost
+
+    q = q_ref[0].astype(jnp.float32)                 # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                 # (BK, D)
+    v = v_ref[0].astype(jnp.float32)                 # (BK, Dv)
+    do = do_ref[0].astype(jnp.float32)               # (BQ, Dv)
+
+    _, ds = _recomputed_p_ds(
+        q, k, v, do, delta_ref[0], m_ref[0], n_ref[0], i, j,
+        scale=scale, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, skv=skv, q_len=q_len, kv_len=kv_len)
+    dq_loc = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_ref[0] = dq_loc
+
+    @pl.when(j > 0)
+    def _fold():
+        dq_ref[0] += dq_loc
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, m_ref, n_ref,
+                    dk_ref, dv_ref, *, scale: float, causal: bool,
+                    window: int | None, block_q: int, block_k: int,
+                    skv: int, q_len: int, kv_len: int):
+    j = pl.program_id(1)                             # KV tile
+    i = pl.program_id(2)                             # Q innermost
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+
+    p, ds = _recomputed_p_ds(
+        q, k, v, do, delta_ref[0], m_ref[0], n_ref[0], i, j,
+        scale=scale, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, skv=skv, q_len=q_len, kv_len=kv_len)
+    # Contract the Q axis: ds^T @ q -> (BK, D), p^T @ do -> (BK, Dv).
+    dk_loc = jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    dv_loc = jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_ref[0] = dk_loc
+        dv_ref[0] = dv_loc
+
+    @pl.when(i > 0)
+    def _fold():
+        dk_ref[0] += dk_loc
+        dv_ref[0] += dv_loc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "window", "block_q", "block_k",
+                     "q_len", "kv_len"))
+def flash_attention_bwd_gqa(q: jax.Array, k: jax.Array, v: jax.Array,
+                            o: jax.Array, m_sum: jax.Array,
+                            n_sum: jax.Array, do: jax.Array, *,
+                            causal: bool = False,
+                            scale: float | None = None,
+                            window: int | None = None,
+                            block_q: int | None = None,
+                            block_k: int | None = None,
+                            q_len: int | None = None,
+                            kv_len: int | None = None):
+    """Flash-attention backward from the forward's saved statistics.
+
+    q/k [B, H, S, D], v/o/do [B, H, S, Dv], m_sum/n_sum [B, H, Sq, 1] f32
+    (from :func:`flash_attention_fwd_gqa` at the SAME mask/scale settings).
+    Sq % block_q == Skv % block_k == 0 required — ``ops.flash_attention_bwd``
+    pads (q/o/do rows with zeros, stats with (1, 0), so padded rows produce
+    p finite and ds = 0: exactly zero gradient contributions).
+
+    Returns ``(dq, dk, dv)`` in the input dtypes.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    dv_dim = v.shape[3]
+    if block_q is None or block_k is None:
+        rq, rk = registry.block_shapes("flash_attention_bwd", sq, skv,
+                                       q.dtype)
+        block_q = block_q or min(rq, sq)
+        block_k = block_k or min(rk, skv)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_len is None:
+        q_len = sq
+    if kv_len is None:
+        kv_len = skv
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+
+    # delta = rowsum(do * o): the p @ dp diagonal term, cheap in jnp.
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1, keepdims=True)          # [B, H, Sq, 1]
+
+    g = b * h
+    qf = q.reshape(g, sq, d)
+    kf = k.reshape(g, skv, d)
+    vf = v.reshape(g, skv, dv_dim)
+    dof = do.reshape(g, sq, dv_dim)
+    deltaf = delta.reshape(g, sq, 1)
+    mf = m_sum.reshape(g, sq, 1)
+    nf = n_sum.reshape(g, sq, 1)
+
+    kern_kw = dict(scale=scale, causal=causal, window=window,
+                   block_q=block_q, block_k=block_k, skv=skv,
+                   q_len=q_len, kv_len=kv_len)
+    q_spec = pl.BlockSpec((1, block_q, d), lambda g_, a, b_: (g_, a, 0))
+    k_spec = pl.BlockSpec((1, block_k, d), lambda g_, a, b_: (g_, b_, 0))
+    v_spec = pl.BlockSpec((1, block_k, dv_dim), lambda g_, a, b_: (g_, b_, 0))
+    do_spec = pl.BlockSpec((1, block_q, dv_dim), lambda g_, a, b_: (g_, a, 0))
+    stat_spec = pl.BlockSpec((1, block_q, 1), lambda g_, a, b_: (g_, a, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **kern_kw),
+        grid=(g, sq // block_q, skv // block_k),
+        in_specs=[q_spec, k_spec, v_spec, do_spec, stat_spec, stat_spec,
+                  stat_spec],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda g_, a, b_: (g_, a, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, sq, d), jnp.float32),
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "parallel", "arbitrary")),
+    )(qf, kf, vf, dof, deltaf, mf, nf)
+
+    # dk/dv: Q innermost, so block-index maps see grid order (g, j, i).
+    qi_spec = pl.BlockSpec((1, block_q, d), lambda g_, a, b_: (g_, b_, 0))
+    ki_spec = pl.BlockSpec((1, block_k, d), lambda g_, a, b_: (g_, a, 0))
+    vi_spec = pl.BlockSpec((1, block_k, dv_dim),
+                           lambda g_, a, b_: (g_, a, 0))
+    doi_spec = pl.BlockSpec((1, block_q, dv_dim),
+                            lambda g_, a, b_: (g_, b_, 0))
+    stati_spec = pl.BlockSpec((1, block_q, 1), lambda g_, a, b_: (g_, b_, 0))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **kern_kw),
+        grid=(g, skv // block_k, sq // block_q),
+        in_specs=[qi_spec, ki_spec, vi_spec, doi_spec, stati_spec,
+                  stati_spec, stati_spec],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda g_, a, b_: (g_, a, 0)),
+            pl.BlockSpec((1, block_k, dv_dim),
+                         lambda g_, a, b_: (g_, a, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, skv, d), jnp.float32),
+            jax.ShapeDtypeStruct((g, skv, dv_dim), jnp.float32),
+        ],
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "parallel", "arbitrary")),
+    )(qf, kf, vf, dof, deltaf, mf, nf)
+
+    return (dq.reshape(b, h, sq, d).astype(q.dtype),
+            dk.reshape(b, h, skv, d).astype(k.dtype),
+            dv.reshape(b, h, skv, dv_dim).astype(v.dtype))

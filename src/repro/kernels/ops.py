@@ -46,22 +46,27 @@ def _blocks(op: str, rows: int, cols: int, dtype, block_rows, block_cols,
                                  block_cols=block_cols, shards=shards)
 
 
-def _decode_shards(hkv: int):
+def _tp_shards(dim: int):
     """(n_shards, mesh) when an active :func:`autoshard.hints` mesh
-    tensor-parallel-shards this decode op's KV heads; (1, None) otherwise.
+    tensor-parallel-shards this op's ``dim``-sized axis; (1, None)
+    otherwise.  The shard count keys the autotune cache (``|s{tp}``
+    suffix) — a per-shard grid sees ``dim / tp`` of the axis, so its best
+    tile differs from the unsharded one.
 
-    Inside the serving scheduler's mesh context the pool arenas are laid
-    out with the KV-head axis over ``model`` (``sharding.pool_specs``); the
-    Pallas decode kernels then run under ``shard_map`` so each shard's grid
-    sees its LOCAL ``Hkv / tp`` heads — heads are independent in decode
-    attention, so the mapped kernel needs no collectives."""
+    Decode ops pass their KV-head count (inside the serving scheduler's
+    mesh context the pool arenas are laid out with the KV-head axis over
+    ``model`` — ``sharding.pool_specs`` — and the Pallas decode kernels
+    run under ``shard_map``, each shard's grid seeing its LOCAL ``Hkv /
+    tp`` heads).  The training-side backward ops pass the axis the mesh
+    splits for them: q-heads for ``flash_attention_bwd``, vocab columns
+    for ``lmhead_xent``."""
     from repro.distributed import autoshard  # lazy: kernels ↛ distributed
 
     mesh = autoshard.active_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return 1, None
     tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
-    if tp <= 1 or hkv % tp:
+    if tp <= 1 or dim % tp:
         return 1, None
     return tp, mesh
 
@@ -174,26 +179,245 @@ cross_entropy.defvjp(_ce_fwd, _ce_bwd)
 
 
 # ---------------------------------------------------------------------------
-# Flash attention (fwd kernel; bwd via the jnp reference formula -- the
-# recompute pass is algorithmically the paper's pass 2, XLA-fused here).
+# Fused LM-head + cross-entropy: loss(h @ w, labels) with the logits
+# recomputed per vocab tile in both passes — neither the [T, V] logits nor
+# their gradient is ever materialized whole.  Same three implementations as
+# flash attention ("pallas" kernels in twopass_xent.py / "twopass" jnp
+# chunked forms / "ref" jax.vjp over the materialized-logits reference),
+# dispatched by ``train_bwd_impl``.  The ``lmhead_xent`` registry op.
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _lmhead_ref_loss(h, w, labels):
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    return _ref.cross_entropy_ref(logits, labels)
+
+
+def _lmhead_blocks(h, w, block_t, block_v, policy):
+    t, v = h.shape[0], w.shape[1]
+    shards, _ = _tp_shards(v)
+    return _blocks("lmhead_xent", t, v, h.dtype, block_t, block_v, policy,
+                   shards=shards)
+
+
+def _lmhead_chunks(v, bv):
+    return min(MAX_T_CHUNKS, -(-v // bv))
+
+
+@functools.partial(jax.jit, static_argnames=("n_v_chunks",))
+def _lmhead_mn_fwd(h, w, labels, *, n_v_chunks: int):
+    """jnp chunked (m, n) fused LM-head CE: (loss, m_sum, n_sum)."""
+    from repro.core import numerics
+
+    t, d = h.shape
+    v = w.shape[1]
+    hf, wf = h.astype(jnp.float32), w.astype(jnp.float32)
+    vc = -(-v // n_v_chunks)
+    m_acc = jnp.zeros((t, 1), jnp.float32)
+    n_acc = jnp.full((t, 1), numerics.MINUS_INF_N)
+    lab_logit = jnp.zeros((t,), jnp.float32)
+    for j in range(n_v_chunks):
+        lo, hi = j * vc, min(v, (j + 1) * vc)
+        if lo >= hi:
+            continue
+        x = hf @ wf[:, lo:hi]
+        m, n = numerics.ext_exp(x)
+        n_loc = jnp.max(n, axis=-1, keepdims=True)
+        m_loc = jnp.sum(m * numerics.exp2_int(n - n_loc), axis=-1,
+                        keepdims=True)
+        n_new = jnp.maximum(n_acc, n_loc)
+        m_acc = (m_acc * numerics.exp2_int(n_acc - n_new)
+                 + m_loc * numerics.exp2_int(n_loc - n_new))
+        n_acc = n_new
+        hit = jnp.arange(lo, hi)[None, :] == labels[:, None]
+        lab_logit = lab_logit + jnp.sum(jnp.where(hit, x, 0.0), axis=-1)
+    lse = (jnp.log(jnp.maximum(m_acc, 1e-37))
+           + n_acc * jnp.float32(numerics.LN2_HI + numerics.LN2_LO))
+    return lse[:, 0] - lab_logit, m_acc, n_acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_v_chunks",))
+def _lmhead_mn_bwd(h, w, labels, m_sum, n_sum, dloss, *, n_v_chunks: int):
+    """jnp chunked LM-head CE backward from saved stats: (dh, dw)."""
+    from repro.core import numerics
+
+    t, d = h.shape
+    v = w.shape[1]
+    hf, wf = h.astype(jnp.float32), w.astype(jnp.float32)
+    inv = 1.0 / jnp.maximum(m_sum, 1e-37)
+    vc = -(-v // n_v_chunks)
+    dh = jnp.zeros((t, d), jnp.float32)
+    dw_parts = []
+    for j in range(n_v_chunks):
+        lo, hi = j * vc, min(v, (j + 1) * vc)
+        if lo >= hi:
+            continue
+        x = hf @ wf[:, lo:hi]
+        m, n = numerics.ext_exp(x)
+        p = m * numerics.exp2_int(n - n_sum) * inv
+        hit = jnp.arange(lo, hi)[None, :] == labels[:, None]
+        dlog = (p - jnp.where(hit, 1.0, 0.0)) * dloss[:, None]
+        dh = dh + dlog @ wf[:, lo:hi].T
+        dw_parts.append(hf.T @ dlog)
+    return dh, jnp.concatenate(dw_parts, axis=1)
+
+
+def _lmhead_pad(h, w, labels, bt, bv):
+    """Pad tokens/vocab to tiles.  h rows pad with ZEROS (finite logits —
+    an -inf-style row pad would make the recomputed probabilities NaN and
+    poison dw); w columns pad with zeros and the kernel's ``v_len`` mask
+    sends them to -inf score-side."""
+    t, d = h.shape
+    v = w.shape[1]
+    pt, pv = _round_up(t, bt), _round_up(v, bv)
+    if pt != t:
+        h = jnp.pad(h, ((0, pt - t), (0, 0)))
+        labels = jnp.pad(labels.astype(jnp.int32), (0, pt - t))
+    if pv != v:
+        w = jnp.pad(w, ((0, 0), (0, pv - v)))
+    return h, w, labels.astype(jnp.int32), pt, pv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def lmhead_cross_entropy(h: jax.Array, w: jax.Array, labels: jax.Array,
+                         block_t: int | None = None,
+                         block_v: int | None = None,
+                         policy=None, impl: str | None = None) -> jax.Array:
+    """Per-token CE of ``h @ w`` vs ``labels`` without materializing the
+    logits.  h: [T, D]; w: [D, V]; labels: [T] int -> loss [T] f32.
+    Differentiable in h and w; ``impl`` pins "pallas" | "twopass" | "ref"
+    (None = policy-dispatched like :func:`flash_attention`)."""
+    loss, _ = _lmhead_fwd(h, w, labels, block_t, block_v, policy, impl)
+    return loss
+
+
+def _lmhead_fwd_stats(h, w, labels, block_t, block_v, policy, impl):
+    bt, bv = _lmhead_blocks(h, w, block_t, block_v, policy)
+    if impl == "twopass":
+        return _lmhead_mn_fwd(h, w, labels,
+                              n_v_chunks=_lmhead_chunks(w.shape[1], bv))
+    t, v = h.shape[0], w.shape[1]
+    hp, wp, lab, pt, pv = _lmhead_pad(h, w, labels, bt, bv)
+    loss, m_sum, n_sum = _xent.lmhead_xent_fwd_2d(
+        hp, wp, lab, block_t=bt, block_v=bv, v_len=v)
+    return loss[:t], m_sum[:t], n_sum[:t]
+
+
+def _lmhead_fwd(h, w, labels, block_t, block_v, policy, impl):
+    impl = train_bwd_impl(policy, impl)
+    if impl == "ref":
+        loss = _lmhead_ref_loss(h, w, labels)
+        return loss, (h, w, labels, None, None)
+    loss, m_sum, n_sum = _lmhead_fwd_stats(h, w, labels, block_t, block_v,
+                                           policy, impl)
+    return loss, (h, w, labels, m_sum, n_sum)
+
+
+def _lmhead_bwd(block_t, block_v, policy, impl, res, dloss):
+    h, w, labels, m_sum, n_sum = res
+    impl = train_bwd_impl(policy, impl)
+    if impl == "ref":
+        _, vjp = jax.vjp(lambda h_, w_: _lmhead_ref_loss(h_, w_, labels),
+                         h, w)
+        dh, dw = vjp(dloss)
+        return dh, dw, None
+    bt, bv = _lmhead_blocks(h, w, block_t, block_v, policy)
+    if impl == "twopass":
+        dh, dw = _lmhead_mn_bwd(h, w, labels, m_sum, n_sum,
+                                dloss.astype(jnp.float32),
+                                n_v_chunks=_lmhead_chunks(w.shape[1], bv))
+    else:
+        t, v = h.shape[0], w.shape[1]
+        hp, wp, lab, pt, pv = _lmhead_pad(h, w, labels, bt, bv)
+        dl = jnp.zeros((pt,), jnp.float32).at[:t].set(
+            dloss.astype(jnp.float32))
+        if pt != t:
+            # Padded token rows: stats (m=1, n=0) keep the recomputed p
+            # finite; dloss=0 zeroes their dlogits, so dw stays clean.
+            m_sum = jnp.pad(m_sum, ((0, pt - t), (0, 0)),
+                            constant_values=1.0)
+            n_sum = jnp.pad(n_sum, ((0, pt - t), (0, 0)))
+        dh = _xent.lmhead_xent_dh_2d(hp, wp, lab, m_sum, n_sum, dl,
+                                     block_t=bt, block_v=bv, v_len=v)[:t]
+        dw = _xent.lmhead_xent_dw_2d(hp, wp, lab, m_sum, n_sum, dl,
+                                     block_t=bt, block_v=bv,
+                                     v_len=v)[:, :v]
+    return dh.astype(h.dtype), dw.astype(w.dtype), None
+
+
+lmhead_cross_entropy.defvjp(_lmhead_fwd, _lmhead_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention.  Three implementations per phase, dispatched by
+# ``train_bwd_impl`` on SoftmaxPolicy.use_kernels / an explicit ``impl=``:
+#
+#   "pallas"  — the kernels in kernels/flash_attention.py (fwd saves the
+#               (m, n) statistics; bwd re-streams K/V tiles against them).
+#               Production on TPU; interpret mode on CPU (parity tests).
+#   "twopass" — the jnp chunked (m, n) forms below: the same
+#               recompute-from-stats backward, XLA-compiled.  Production on
+#               CPU/GPU, and the reference the Pallas backward is tested
+#               against at matched tiles.
+#   "ref"     — jax.vjp over kernels/ref.attention_ref (materialized
+#               scores): the oracle, and the bench's reference lane.
+#
+# Without a policy the legacy split applies — Pallas forward, reference
+# VJP backward — so callers that never opted into kernels keep their exact
+# previous numerics.
+# ---------------------------------------------------------------------------
+def _train_backend_impl() -> str:
+    """The production implementation for the training-side backward ops on
+    this backend: Pallas on TPU, the jnp (m, n) forms elsewhere — CPU
+    Pallas is interpret mode (a correctness artifact, not a fast path; cf.
+    ``autotune.decode_kernel_path``) and GPU lowering is untested."""
+    return "pallas" if jax.default_backend() == "tpu" else "twopass"
+
+
+def train_bwd_impl(policy=None, impl: str | None = None) -> str:
+    """Backward-implementation dispatch for ``flash_attention`` /
+    ``lmhead_cross_entropy``.  Explicit ``impl`` wins (tests/tuner callers
+    pick knowingly); ``policy.use_kernels`` routes to the backend's
+    production implementation; otherwise the reference VJP."""
+    if impl is not None:
+        if impl not in ("pallas", "twopass", "ref"):
+            raise ValueError(f"unknown impl {impl!r}")
+        return impl
+    if policy is not None and policy.use_kernels:
+        return _train_backend_impl()
+    return "ref"
+
+
+def _flash_impls(policy, impl) -> tuple[str, str]:
+    """(forward, backward) implementation pair for ``flash_attention``.
+    The stats-saving implementations pair with themselves; the "ref"
+    backward keeps the legacy Pallas forward unless "ref" was explicit."""
+    bwd = train_bwd_impl(policy, impl)
+    if bwd != "ref":
+        return bwd, bwd
+    return ("ref" if impl == "ref" else "pallas"), "ref"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = False, scale: float | None = None,
                     window: int | None = None,
                     block_q: int | None = None,
                     block_k: int | None = None,
-                    policy=None) -> jax.Array:
-    """Flash attention with registry-resolved tiles.  ``block_q``/``block_k``
-    are explicit overrides (the autotuner sweeps through them); ``policy``
-    (hashable, safe as a nondiff arg) carries attn overrides + the autotune
-    cache setting."""
-    return _flash_fwd_padded(q, k, v, causal, scale, window, block_q,
-                             block_k, policy)
+                    policy=None, impl: str | None = None) -> jax.Array:
+    """Flash attention with registry-resolved tiles.  q/k: [B, H, S, D]
+    (H pre-expanded to q-heads); v: [B, H, Skv, Dv].  ``block_q``/
+    ``block_k`` are explicit overrides (the autotuner sweeps through
+    them); ``policy`` (hashable, safe as a nondiff arg) carries attn
+    overrides + the autotune cache setting and routes the backward through
+    the saved-statistics kernels (see the dispatch table above); ``impl``
+    pins "pallas" | "twopass" | "ref" explicitly."""
+    o, _ = _flash_fwd(q, k, v, causal, scale, window, block_q, block_k,
+                      policy, impl)
+    return o
 
 
-def _flash_fwd_padded(q, k, v, causal, scale, window, block_q=None,
+def _flash_pallas_fwd(q, k, v, causal, scale, window, block_q=None,
                       block_k=None, policy=None):
+    """Pad to tiles, run the Pallas forward, slice -> (o, m_sum, n_sum)."""
     b, h, sq, d = q.shape
     skv = k.shape[2]
     bq, bk = _blocks("flash_attention", sq, skv, q.dtype, block_q, block_k,
@@ -203,31 +427,258 @@ def _flash_fwd_padded(q, k, v, causal, scale, window, block_q=None,
     if psq != sq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, psq - sq), (0, 0)))
     if pskv != skv:
-        # Padded KV must not receive weight: pad k with a sentinel the mask
-        # kills.  Without masks, kernel handles it via -inf scores: pad k so
-        # scores become -inf is not possible with finite pads, so instead we
-        # always enable the window/causal mask path by padding at the END and
-        # masking kpos >= skv.
+        # Padded KV must not receive weight: finite pads can't force -inf
+        # scores, so padding sits at the END and the kernel's kv_len mask
+        # (kpos < skv) kills it.
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pskv - skv), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pskv - skv), (0, 0)))
-    o = _fa.flash_attention_gqa(
+    o, m_sum, n_sum = _fa.flash_attention_fwd_gqa(
         q, k, v, causal=causal, scale=scale, window=window,
         block_q=bq, block_k=bk, kv_len=skv, q_len=sq)
-    return o[:, :, :sq, :]
+    return o[:, :, :sq, :], m_sum[:, :, :sq], n_sum[:, :, :sq]
 
 
-def _flash_fwd(q, k, v, causal, scale, window, block_q, block_k, policy):
-    return _flash_fwd_padded(q, k, v, causal, scale, window, block_q,
-                             block_k, policy), (q, k, v)
+def _flash_fwd_padded(q, k, v, causal, scale, window, block_q=None,
+                      block_k=None, policy=None):
+    """Output-only Pallas forward (registry bind / non-vjp callers)."""
+    o, _, _ = _flash_pallas_fwd(q, k, v, causal, scale, window, block_q,
+                                block_k, policy)
+    return o
 
 
-def _flash_bwd(causal, scale, window, block_q, block_k, policy, res, do):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _ref.attention_ref(q_, k_, v_, causal=causal,
-                                              scale=scale, window=window),
-        q, k, v)
-    return vjp(do)
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "window",
+                                             "n_q_chunks", "n_kv_chunks"))
+def _flash_mn_fwd(q, k, v, *, causal: bool, scale: float,
+                  window: int | None, n_q_chunks: int, n_kv_chunks: int):
+    """jnp chunked (m, n) flash forward: [B, H, S, D] -> (o, m_sum, n_sum).
+    The same end-aligned masking as the Pallas kernel (qpos = i + Skv - Sq,
+    matching ref.attention_ref); chunk loops are Python-unrolled."""
+    from repro.core import numerics
+
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    dv = v.shape[3]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    qc = -(-sq // n_q_chunks)
+    kc = -(-skv // n_kv_chunks)
+    os_, ms, ns = [], [], []
+    for i in range(n_q_chunks):
+        qlo, qhi = i * qc, min(sq, (i + 1) * qc)
+        if qlo >= qhi:
+            continue
+        qpos = (jnp.arange(qlo, qhi) + (skv - sq))[:, None]
+        o_acc = jnp.zeros((b, h, qhi - qlo, dv), jnp.float32)
+        m_acc = jnp.zeros((b, h, qhi - qlo, 1), jnp.float32)
+        n_acc = jnp.full((b, h, qhi - qlo, 1), numerics.MINUS_INF_N)
+        for j in range(n_kv_chunks):
+            klo, khi = j * kc, min(skv, (j + 1) * kc)
+            if klo >= khi:
+                continue
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf[:, :, qlo:qhi],
+                           kf[:, :, klo:khi]) * scale
+            if causal or window is not None:
+                kpos = jnp.arange(klo, khi)[None, :]
+                mask = jnp.ones((qhi - qlo, khi - klo), bool)
+                if causal:
+                    mask &= kpos <= qpos
+                if window is not None:
+                    mask &= kpos > qpos - window
+                s = jnp.where(mask, s, _NEG_INF)
+            m, n = numerics.ext_exp(s)
+            n_loc = jnp.max(n, axis=-1, keepdims=True)
+            w = m * numerics.exp2_int(n - n_loc)
+            m_loc = jnp.sum(w, axis=-1, keepdims=True)
+            o_loc = jnp.einsum("bhqk,bhkd->bhqd", w, vf[:, :, klo:khi])
+            n_new = jnp.maximum(n_acc, n_loc)
+            a_acc = numerics.exp2_int(n_acc - n_new)
+            a_loc = numerics.exp2_int(n_loc - n_new)
+            o_acc = o_acc * a_acc + o_loc * a_loc
+            m_acc = m_acc * a_acc + m_loc * a_loc
+            n_acc = n_new
+        os_.append(o_acc / jnp.maximum(m_acc, 1e-37))
+        ms.append(m_acc)
+        ns.append(n_acc)
+    return (jnp.concatenate(os_, axis=2).astype(q.dtype),
+            jnp.concatenate(ms, axis=2), jnp.concatenate(ns, axis=2))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "window",
+                                             "n_q_chunks", "n_kv_chunks"))
+def _flash_mn_bwd(q, k, v, o, m_sum, n_sum, do, *, causal: bool,
+                  scale: float, window: int | None, n_q_chunks: int,
+                  n_kv_chunks: int):
+    """jnp recompute-style flash backward: probabilities reconstructed per
+    chunk from the forward's (m_sum, n_sum) — ``p = m * 2^(n - n_sum) /
+    m_sum`` with exact power-of-two rescales — then the standard dq/dk/dv
+    contractions, no score matrix ever materialized whole."""
+    from repro.core import numerics
+
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    dv = v.shape[3]
+    qf, kf, vf, dof = (x.astype(jnp.float32) for x in (q, k, v, do))
+    delta = jnp.sum(dof * o.astype(jnp.float32), axis=-1, keepdims=True)
+    inv = 1.0 / jnp.maximum(m_sum, 1e-37)
+    qc = -(-sq // n_q_chunks)
+    kc = -(-skv // n_kv_chunks)
+    dqs = []
+    dk_parts: dict = {}
+    dv_parts: dict = {}
+    for i in range(n_q_chunks):
+        qlo, qhi = i * qc, min(sq, (i + 1) * qc)
+        if qlo >= qhi:
+            continue
+        qpos = (jnp.arange(qlo, qhi) + (skv - sq))[:, None]
+        do_i = dof[:, :, qlo:qhi]
+        dq_i = jnp.zeros((b, h, qhi - qlo, d), jnp.float32)
+        for j in range(n_kv_chunks):
+            klo, khi = j * kc, min(skv, (j + 1) * kc)
+            if klo >= khi:
+                continue
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf[:, :, qlo:qhi],
+                           kf[:, :, klo:khi]) * scale
+            if causal or window is not None:
+                kpos = jnp.arange(klo, khi)[None, :]
+                mask = jnp.ones((qhi - qlo, khi - klo), bool)
+                if causal:
+                    mask &= kpos <= qpos
+                if window is not None:
+                    mask &= kpos > qpos - window
+                s = jnp.where(mask, s, _NEG_INF)
+            m, n = numerics.ext_exp(s)
+            p = (m * numerics.exp2_int(n - n_sum[:, :, qlo:qhi])
+                 * inv[:, :, qlo:qhi])
+            dp = jnp.einsum("bhqe,bhke->bhqk", do_i, vf[:, :, klo:khi])
+            ds = p * (dp - delta[:, :, qlo:qhi]) * scale
+            dq_i += jnp.einsum("bhqk,bhkd->bhqd", ds, kf[:, :, klo:khi])
+            dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, qf[:, :, qlo:qhi])
+            dv_j = jnp.einsum("bhqk,bhqe->bhke", p, do_i)
+            dk_parts[j] = dk_parts.get(j, 0.0) + dk_j
+            dv_parts[j] = dv_parts.get(j, 0.0) + dv_j
+        dqs.append(dq_i)
+    dk = jnp.concatenate([dk_parts[j] for j in sorted(dk_parts)], axis=2)
+    dv_ = jnp.concatenate([dv_parts[j] for j in sorted(dv_parts)], axis=2)
+    return (jnp.concatenate(dqs, axis=2).astype(q.dtype),
+            dk.astype(k.dtype), dv_.astype(v.dtype))
+
+
+def _flash_chunk_counts(sq, skv, bq, bk):
+    return (min(MAX_SLOT_CHUNKS, -(-sq // bq)),
+            min(MAX_T_CHUNKS, -(-skv // bk)))
+
+
+def flash_attention_fwd_stats(q, k, v, *, causal: bool = False,
+                              scale: float | None = None,
+                              window: int | None = None,
+                              block_q: int | None = None,
+                              block_k: int | None = None,
+                              policy=None, impl: str | None = None):
+    """(o, m_sum, n_sum) via a stats-saving forward — the residuals
+    :func:`flash_attention_bwd` consumes.  ``impl=None`` picks the
+    backend's production implementation (tuner/tests entry)."""
+    if impl is None:
+        impl = _train_backend_impl()
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    if impl == "pallas":
+        return _flash_pallas_fwd(q, k, v, causal, scale, window, block_q,
+                                 block_k, policy)
+    sq, skv = q.shape[2], k.shape[2]
+    bq, bk = _blocks("flash_attention", sq, skv, q.dtype, block_q, block_k,
+                     policy)
+    nq, nkv = _flash_chunk_counts(sq, skv, bq, bk)
+    return _flash_mn_fwd(q, k, v, causal=causal, scale=scale, window=window,
+                         n_q_chunks=nq, n_kv_chunks=nkv)
+
+
+def flash_attention_bwd(q, k, v, o, m_sum, n_sum, do, *,
+                        causal: bool = False, scale: float | None = None,
+                        window: int | None = None,
+                        block_q: int | None = None,
+                        block_k: int | None = None,
+                        policy=None, impl: str | None = None):
+    """dq/dk/dv from the forward's saved (m, n) statistics — the
+    ``flash_attention_bwd`` registry op (what the autotuner sweeps).
+
+    q/k: [B, H, S, D]; v/o/do: [B, H, S, Dv]; m_sum/n_sum: [B, H, Sq, 1]
+    f32 from :func:`flash_attention_fwd_stats` at the same settings.
+    ``impl`` is "pallas" or "twopass" (None = the backend's production
+    implementation); tiles resolve through the registry with the
+    tensor-parallel ``|s{tp}`` cache suffix when an active mesh shards the
+    head axis."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    if impl is None:
+        impl = _train_backend_impl()
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    shards, _ = _tp_shards(h)
+    bq, bk = _blocks("flash_attention_bwd", sq, skv, q.dtype, block_q,
+                     block_k, policy, shards=shards)
+    if impl == "twopass":
+        nq, nkv = _flash_chunk_counts(sq, skv, bq, bk)
+        return _flash_mn_bwd(q, k, v, o, m_sum, n_sum, do, causal=causal,
+                             scale=scale, window=window, n_q_chunks=nq,
+                             n_kv_chunks=nkv)
+    bq, bk = min(bq, _round_up(sq, 128)), min(bk, _round_up(skv, 128))
+    psq, pskv = _round_up(sq, bq), _round_up(skv, bk)
+    if psq != sq:
+        # Padded q rows: zero q/o/do with stats (m=1, n=0) makes the
+        # recomputed p finite and ds exactly zero — no NaN can leak into
+        # the dk/dv accumulation from the padding.
+        pad4 = ((0, 0), (0, 0), (0, psq - sq), (0, 0))
+        q, o, do = (jnp.pad(x, pad4) for x in (q, o, do))
+        m_sum = jnp.pad(m_sum, pad4, constant_values=1.0)
+        n_sum = jnp.pad(n_sum, pad4)
+    if pskv != skv:
+        pad4 = ((0, 0), (0, 0), (0, pskv - skv), (0, 0))
+        k, v = jnp.pad(k, pad4), jnp.pad(v, pad4)
+    dq, dk, dv = _fa.flash_attention_bwd_gqa(
+        q, k, v, o, m_sum, n_sum, do, causal=causal, scale=scale,
+        window=window, block_q=bq, block_k=bk, q_len=sq, kv_len=skv)
+    return dq[:, :, :sq], dk[:, :, :skv], dv[:, :, :skv]
+
+
+def _flash_fwd(q, k, v, causal, scale, window, block_q, block_k, policy,
+               impl):
+    fwd_impl, bwd_impl = _flash_impls(policy, impl)
+    if fwd_impl == "ref":
+        o = _ref.attention_ref(q, k, v, causal=causal, scale=scale,
+                               window=window)
+        return o, (q, k, v, None, None, None)
+    if fwd_impl == "twopass":
+        if scale is None:
+            scale = 1.0 / (q.shape[-1] ** 0.5)
+        sq, skv = q.shape[2], k.shape[2]
+        bq, bk = _blocks("flash_attention", sq, skv, q.dtype, block_q,
+                         block_k, policy)
+        nq, nkv = _flash_chunk_counts(sq, skv, bq, bk)
+        o, m_sum, n_sum = _flash_mn_fwd(q, k, v, causal=causal, scale=scale,
+                                        window=window, n_q_chunks=nq,
+                                        n_kv_chunks=nkv)
+    else:
+        o, m_sum, n_sum = _flash_pallas_fwd(q, k, v, causal, scale, window,
+                                            block_q, block_k, policy)
+    if bwd_impl == "ref":
+        return o, (q, k, v, None, None, None)
+    return o, (q, k, v, o, m_sum, n_sum)
+
+
+def _flash_bwd(causal, scale, window, block_q, block_k, policy, impl, res,
+               do):
+    q, k, v, o, m_sum, n_sum = res
+    _, bwd_impl = _flash_impls(policy, impl)
+    if bwd_impl == "ref":
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: _ref.attention_ref(q_, k_, v_, causal=causal,
+                                                  scale=scale,
+                                                  window=window),
+            q, k, v)
+        return vjp(do)
+    return flash_attention_bwd(q, k, v, o, m_sum, n_sum, do, causal=causal,
+                               scale=scale, window=window, block_q=block_q,
+                               block_k=block_k, policy=policy,
+                               impl=bwd_impl)
 
 
 flash_attention.defvjp(_flash_fwd, _flash_bwd)
@@ -454,7 +905,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     s, hkv, _, d = q.shape
     t = k.shape[2]
     kernel = _kernel_path(policy, use_kernel)
-    shards, mesh = _decode_shards(hkv) if kernel else (1, None)
+    shards, mesh = _tp_shards(hkv) if kernel else (1, None)
     bs, bt = _blocks("decode_attention", s, t, q.dtype, block_s, block_t,
                      policy, shards=shards)
     if scale is None:
@@ -520,7 +971,7 @@ def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
     pmax = page_table.shape[1]
     t = pmax * ps
     kernel = _kernel_path(policy, use_kernel)
-    shards, mesh = _decode_shards(hkv) if kernel else (1, None)
+    shards, mesh = _tp_shards(hkv) if kernel else (1, None)
     bs, bt = _blocks("decode_attention_paged", s, t, q.dtype, block_s,
                      block_t, policy, shards=shards)
     if scale is None:
@@ -578,5 +1029,7 @@ registry.bind("softmax", _tp2.twopass_softmax_2d)
 registry.bind("logsumexp", _tp2.twopass_stats_2d)
 registry.bind("xent", _xent.xent_fwd_2d)
 registry.bind("flash_attention", _fa.flash_attention_gqa)
+registry.bind("flash_attention_bwd", _fa.flash_attention_bwd_gqa)
+registry.bind("lmhead_xent", _xent.lmhead_xent_fwd_2d)
 registry.bind("decode_attention", _da.decode_attention_pallas)
 registry.bind("decode_attention_paged", _da.decode_attention_paged_pallas)

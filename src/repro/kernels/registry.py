@@ -332,6 +332,25 @@ register(KernelSpec(name="kv_page", row_align=1, row_cap=1,
 register(KernelSpec(name="kv_page_quant", row_align=1, row_cap=1,
                     col_align=16, col_cap=128, full_col_threshold=0,
                     tune_row_cap=8, tune_col_cap=512))
+# flash-attention backward (ops.flash_attention_bwd): recompute-style
+# dq/dk/dv from the forward's saved (m, n) statistics.  Same MXU geometry
+# as the forward — rows = Sq tiles, cols = Skv tiles — but the bwd streams
+# BOTH directions (dq sweeps KV innermost, dk/dv sweep Q innermost), so
+# the profitable tile can differ from the forward's; it gets its own cache
+# entry, keyed with the ``|s{tp}`` shard suffix when the q-head axis is
+# mesh-sharded.  The jnp "twopass" implementation reads the same blocks as
+# chunk lengths for its unrolled (m, n) loops.
+register(KernelSpec(name="flash_attention_bwd", row_align=128, row_cap=128,
+                    col_align=128, col_cap=128, full_col_threshold=0,
+                    tune_row_cap=512, tune_col_cap=512))
+# fused LM-head CE (ops.lmhead_cross_entropy): rows = tokens, cols = VOCAB
+# — the streamed axis (logits recomputed from h @ w per vocab tile in both
+# passes; nothing [T, V]-shaped ever materializes).  xent's geometry, but
+# its own entry: the bwd re-streams the vocab three times (fwd stats, dh,
+# dw), so the profitable tile trades recompute against VMEM differently
+# than the logits-in-memory xent op.  Cache keys carry ``|s{tp}`` when the
+# vocab axis is mesh-sharded (each shard streams V/tp columns).
+register(KernelSpec(name="lmhead_xent", full_col_threshold=2048))
 
 
 def bind(op: str, fn: Callable) -> None:

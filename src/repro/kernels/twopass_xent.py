@@ -126,3 +126,205 @@ def xent_bwd_2d(logits: jax.Array, labels: jax.Array, m_sum: jax.Array,
         **_tpu_params(("parallel", "parallel")),
     )(logits, labels.astype(jnp.int32)[:, None], m_sum, n_sum,
       dloss.astype(jnp.float32)[:, None])
+
+
+# ---------------------------------------------------------------------------
+# Fused LM-head + cross-entropy: the same two-pass structure, but the logits
+# tile is RECOMPUTED from hidden x W_head inside every kernel — the [T, V]
+# logit matrix (and its gradient) never exists in HBM at all.  Three kernels:
+#
+#   forward: per vocab tile, x = h @ w_j on the MXU, fold into (m, n) + the
+#            on-the-fly label gather — pass 1 over a matmul that is never
+#            stored.
+#   dh:      per vocab tile, recompute x, p = m * 2^(n - n_sum) / m_sum,
+#            dlogits = (p - onehot) * dloss, accumulate dlogits @ w_j^T.
+#   dw:      the transposed sweep (token tiles innermost) accumulating
+#            h_i^T @ dlogits into each vocab tile of dw.
+#
+# ``v_len`` masks padded vocab columns (w is zero-padded to a block_v
+# multiple): a zero logit would otherwise contribute exp(0) = 1 to every
+# denominator.  The d_model axis stays untiled — LM heads are [T, V]-bound.
+# ---------------------------------------------------------------------------
+def _lmhead_tile(h_ref, w_ref, j, *, block_v: int, v_len: int):
+    """One recomputed logits tile (BT, BV) f32 + its global column ids,
+    padded columns masked to -inf (exact m = 0 through ExtExp)."""
+    h = h_ref[...].astype(jnp.float32)               # (BT, D)
+    w = w_ref[...].astype(jnp.float32)               # (D, BV)
+    x = jax.lax.dot_general(h, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    cols = j * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(cols < v_len, x, -jnp.inf)
+    return x, cols
+
+
+def _lmhead_fwd_kernel(h_ref, w_ref, lab_ref, m_ref, n_ref, ll_ref, *,
+                       block_v: int, v_len: int):
+    j = pl.program_id(1)
+    x, cols = _lmhead_tile(h_ref, w_ref, j, block_v=block_v, v_len=v_len)
+    m, n = ext_exp(x)
+    n_loc = jnp.max(n, axis=-1, keepdims=True)
+    m_loc = jnp.sum(m * exp2_int(n - n_loc), axis=-1, keepdims=True)
+    hit = cols == lab_ref[...]                       # labels < v_len always
+    ll_loc = jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = m_loc
+        n_ref[...] = n_loc
+        ll_ref[...] = ll_loc
+
+    @pl.when(j > 0)
+    def _fold():
+        n_old = n_ref[...]
+        n_new = jnp.maximum(n_old, n_loc)
+        m_ref[...] = (m_ref[...] * exp2_int(n_old - n_new)
+                      + m_loc * exp2_int(n_loc - n_new))
+        n_ref[...] = n_new
+        ll_ref[...] += ll_loc
+
+
+def _lmhead_dlogits(h_ref, w_ref, lab_ref, m_ref, n_ref, dl_ref, j, *,
+                    block_v: int, v_len: int):
+    """Recomputed dlogits tile = (p - onehot) * dloss.  Masked/padded
+    columns give p = 0 and never match a label, so their dlogits vanish."""
+    x, cols = _lmhead_tile(h_ref, w_ref, j, block_v=block_v, v_len=v_len)
+    m, n = ext_exp(x)
+    p = (m * (1.0 / jnp.maximum(m_ref[...], 1e-37))
+         * exp2_int(n - n_ref[...]))
+    onehot = (cols == lab_ref[...]).astype(jnp.float32)
+    return (p - onehot) * dl_ref[...]
+
+
+def _lmhead_dh_kernel(h_ref, w_ref, lab_ref, m_ref, n_ref, dl_ref, dh_ref,
+                      *, block_v: int, v_len: int):
+    j = pl.program_id(1)                             # vocab innermost
+    dlog = _lmhead_dlogits(h_ref, w_ref, lab_ref, m_ref, n_ref, dl_ref, j,
+                           block_v=block_v, v_len=v_len)
+    w = w_ref[...].astype(jnp.float32)               # (D, BV)
+    dh_loc = jax.lax.dot_general(dlog, w, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        dh_ref[...] = dh_loc
+
+    @pl.when(j > 0)
+    def _fold():
+        dh_ref[...] += dh_loc
+
+
+def _lmhead_dw_kernel(h_ref, w_ref, lab_ref, m_ref, n_ref, dl_ref, dw_ref,
+                      *, block_v: int, v_len: int):
+    j = pl.program_id(0)                             # vocab tile
+    i = pl.program_id(1)                             # tokens innermost
+    dlog = _lmhead_dlogits(h_ref, w_ref, lab_ref, m_ref, n_ref, dl_ref, j,
+                           block_v=block_v, v_len=v_len)
+    h = h_ref[...].astype(jnp.float32)               # (BT, D)
+    dw_loc = jax.lax.dot_general(h, dlog, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = dw_loc
+
+    @pl.when(i > 0)
+    def _fold():
+        dw_ref[...] += dw_loc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_v", "v_len"))
+def lmhead_xent_fwd_2d(h: jax.Array, w: jax.Array, labels: jax.Array,
+                       block_t: int = DEFAULT_BLOCK_T,
+                       block_v: int = DEFAULT_BLOCK_V,
+                       v_len: int | None = None):
+    """Fused LM-head CE forward.  h: (T, D); w: (D, V); labels: (T,) int.
+
+    T % block_t == V % block_v == 0 required (``ops.lmhead_cross_entropy``
+    pads h rows/w columns with zeros; ``v_len`` is the true vocab width —
+    padded columns are masked to -inf inside the kernel).
+    Returns (loss (T,), m_sum (T, 1), n_sum (T, 1)).
+    """
+    t, d = h.shape
+    v = w.shape[1]
+    if v_len is None:
+        v_len = v
+    assert t % block_t == 0 and v % block_v == 0, (t, v)
+    grid = (t // block_t, v // block_v)
+
+    m_sum, n_sum, ll = pl.pallas_call(
+        functools.partial(_lmhead_fwd_kernel, block_v=block_v, v_len=v_len),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((d, block_v), lambda i, j: (0, j)),
+                  _stat_spec(block_t)],
+        out_specs=[_stat_spec(block_t), _stat_spec(block_t),
+                   _stat_spec(block_t)],
+        out_shape=[jax.ShapeDtypeStruct((t, 1), jnp.float32)] * 3,
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "arbitrary")),
+    )(h, w, labels.astype(jnp.int32)[:, None])
+
+    ln2 = jnp.float32(LN2_HI + LN2_LO)
+    lse = jnp.log(jnp.maximum(m_sum[:, 0], 1e-37)) + n_sum[:, 0] * ln2
+    return lse - ll[:, 0], m_sum, n_sum
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_v", "v_len"))
+def lmhead_xent_dh_2d(h: jax.Array, w: jax.Array, labels: jax.Array,
+                      m_sum: jax.Array, n_sum: jax.Array,
+                      dloss: jax.Array,
+                      block_t: int = DEFAULT_BLOCK_T,
+                      block_v: int = DEFAULT_BLOCK_V,
+                      v_len: int | None = None) -> jax.Array:
+    """dh (T, D) f32: vocab-streamed ``dlogits @ w^T``, logits recomputed."""
+    t, d = h.shape
+    v = w.shape[1]
+    if v_len is None:
+        v_len = v
+    grid = (t // block_t, v // block_v)
+    return pl.pallas_call(
+        functools.partial(_lmhead_dh_kernel, block_v=block_v, v_len=v_len),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((d, block_v), lambda i, j: (0, j)),
+                  _stat_spec(block_t), _stat_spec(block_t),
+                  _stat_spec(block_t), _stat_spec(block_t)],
+        out_specs=pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "arbitrary")),
+    )(h, w, labels.astype(jnp.int32)[:, None], m_sum, n_sum,
+      dloss.astype(jnp.float32)[:, None])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_v", "v_len"))
+def lmhead_xent_dw_2d(h: jax.Array, w: jax.Array, labels: jax.Array,
+                      m_sum: jax.Array, n_sum: jax.Array,
+                      dloss: jax.Array,
+                      block_t: int = DEFAULT_BLOCK_T,
+                      block_v: int = DEFAULT_BLOCK_V,
+                      v_len: int | None = None) -> jax.Array:
+    """dw (D, V) f32: token-streamed ``h^T @ dlogits``, logits recomputed.
+    Grid is (vocab, tokens) — tokens innermost so each dw tile accumulates
+    across consecutive grid steps."""
+    t, d = h.shape
+    v = w.shape[1]
+    if v_len is None:
+        v_len = v
+    grid = (v // block_v, t // block_t)
+    stat = pl.BlockSpec((block_t, 1), lambda j, i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_lmhead_dw_kernel, block_v=block_v, v_len=v_len),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t, d), lambda j, i: (i, 0)),
+                  pl.BlockSpec((d, block_v), lambda j, i: (0, j)),
+                  stat, stat, stat, stat],
+        out_specs=pl.BlockSpec((d, block_v), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((d, v), jnp.float32),
+        interpret=_interpret(),
+        **_tpu_params(("parallel", "arbitrary")),
+    )(h, w, labels.astype(jnp.int32)[:, None], m_sum, n_sum,
+      dloss.astype(jnp.float32)[:, None])

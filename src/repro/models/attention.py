@@ -196,9 +196,46 @@ def resolve_chunks(sq: int, skv: int, policy: SoftmaxPolicy | None = None,
             min(MAX_KV_CHUNKS, -(-skv // bk)))
 
 
+def _flash_route(q, k, v, policy, *, causal, window, scale, q_offset,
+                 kv_len, qpos):
+    """The training fast path: route [B, Hkv, G, Sq, hd] self-attention
+    through the differentiable ``flash_attention`` registry op (stats-saving
+    forward + recompute-style backward; see kernels/ops.py).  Serving is
+    excluded by construction — decode/prefill always pass qpos/kv_len —
+    and causal/window masking requires Sq == Skv because the kernel's
+    positions are end-aligned while ``q_offset=0`` here is begin-aligned
+    (identical only when the sequences match, i.e. training
+    self-attention)."""
+    from repro.core.softmax_api import SoftmaxAlgorithm
+
+    if not (policy.use_kernels and qpos is None and kv_len is None
+            and q_offset == 0
+            and policy.algorithm == SoftmaxAlgorithm.TWO_PASS):
+        return None
+    sq, skv = q.shape[3], k.shape[2]
+    if (causal or window is not None) and sq != skv:
+        return None
+    b, hkv, g, _, hd = q.shape
+    q3 = q.reshape(b, hkv * g, sq, hd)
+    k3 = jnp.broadcast_to(k[:, :, None], (b, hkv, g, skv, k.shape[3]))
+    k3 = k3.reshape(b, hkv * g, skv, k.shape[3])
+    v3 = jnp.broadcast_to(v[:, :, None], (b, hkv, g, skv, v.shape[3]))
+    v3 = v3.reshape(b, hkv * g, skv, v.shape[3])
+    from repro.kernels import ops as kernel_ops  # lazy: kernels optional
+
+    o = kernel_ops.flash_attention(q3, k3, v3, causal, scale, window,
+                                   None, None, policy)
+    return o.reshape(b, hkv, g, sq, v.shape[3])
+
+
 def attention_core(q, k, v, *, causal, window, scale, q_offset=0,
                    kv_len=None, qpos=None, cfg: ModelConfig):
     policy = cfg.softmax_policy()
+    o = _flash_route(q, k, v, policy, causal=causal, window=window,
+                     scale=scale, q_offset=q_offset, kv_len=kv_len,
+                     qpos=qpos)
+    if o is not None:
+        return o
     nq, nkv = resolve_chunks(q.shape[3], k.shape[2], policy, q.dtype)
     if (nq == 1 and nkv == 1) or qpos is not None:
         return full_attention(

@@ -317,13 +317,27 @@ def lm_loss_from_hidden(params: Params, h, labels, *, cfg: ModelConfig,
     only reachable via labels, so they never contribute).
 
     The per-chunk CE resolves through the SoftmaxPolicy: the jnp path is
-    one (m, n) logsumexp pass; with ``use_kernels`` the fused Pallas CE
-    kernel (fwd = pass 1, bwd = pass 2, custom_vjp) runs instead."""
+    one (m, n) logsumexp pass; with ``use_kernels`` the fused LM-head CE
+    (``ops.lmhead_cross_entropy``) runs instead — logits recomputed per
+    vocab tile in BOTH passes from the custom_vjp's saved (m, n)
+    statistics, so neither the [T, V] logits nor their gradient ever
+    materialize (no ``jax.checkpoint`` wrapper needed: the op's own
+    residuals are the hidden/weights/stats)."""
     policy = policy or cfg.softmax_policy()
     b, s, d = h.shape
     w = _head_w(params, cfg).astype(h.dtype)
     n_chunks = min(n_chunks, s)
     c = -(-s // n_chunks)
+    fused = policy.use_kernels
+
+    def chunk_ce_fused(hc, labc, w_):
+        """One sequence-chunk through the fused LM-head CE op: the matmul
+        itself lives inside the op's vocab-tile stream."""
+        hc = hint(hc, "dp", None, None)
+        tc = hc.shape[0] * hc.shape[1]
+        ce = policy.lmhead_cross_entropy(hc.reshape(tc, d), w_,
+                                         labc.reshape(tc))
+        return ce.reshape(hc.shape[0], hc.shape[1])
 
     @jax.checkpoint
     def chunk_ce(hc, labc, w_):
@@ -338,6 +352,9 @@ def lm_loss_from_hidden(params: Params, h, labels, *, cfg: ModelConfig,
                       "dp", None, "tp").reshape(tc, -1)
         ce = policy.cross_entropy(logits, labc.reshape(tc))
         return ce.reshape(hc.shape[0], hc.shape[1])
+
+    if fused:
+        chunk_ce = chunk_ce_fused
 
     total = jnp.float32(0.0)
     count = jnp.float32(0.0)
