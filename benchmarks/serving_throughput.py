@@ -38,7 +38,15 @@ request stream at several byte budgets and reports:
   * a SWAP lane: an overloaded arena served preempt-and-recompute vs
     demote-to-host-RAM — token parity asserted (the swap round trip is
     byte-exact), ``prefill_tokens_preempt_vs_swap`` (deterministic
-    recompute waste) and mean completion latency under wall clock.
+    recompute waste) and mean completion latency under wall clock,
+  * an ENCDEC lane: whisper requests carrying encoder frames served
+    through the same continuous-batching engine — the projected cross-KV
+    is adopted as read-only arena pages at admission and the ragged step
+    runs a second paged sweep over them.  Greedy token parity against the
+    per-request lockstep loop is a hard assert (the (m, n) combine makes
+    the paged cross sweep exact), and the streaming generator is timed:
+    ``encdec_stream_first_delta`` is serve start -> first yielded token
+    delta, which must land before the run's final delta event.
 
 CSV rows via benchmarks.common.emit.  ``--smoke`` is the CI serving gate:
 tiny model, paged pool end-to-end (admission through the page allocator,
@@ -412,6 +420,96 @@ def _swap_lane(model, params, base, vocab, seed):
     ]
 
 
+def _encdec_lane(base, seed):
+    """Encoder-decoder serving lane (CI acceptance for encdec continuous
+    batching): whisper requests carry encoder frames whose projected
+    cross-KV becomes read-only arena pages at admission (same allocator,
+    same arenas as self-KV; never written during decode, freed at
+    retirement).  Greedy token parity against the per-request lockstep
+    loop is a hard assert — order-free (m, n) accumulation makes the
+    paged cross sweep exact, so batching whisper raggedly must not change
+    a single token.  The streaming row times the engine's ``stream()``
+    generator: serve start -> first yielded delta, asserted to land
+    before the final delta event (tokens must surface before the
+    slowest batch member finishes, or streaming buys nothing)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import build_model
+    from repro.serving import engine
+    from repro.serving.scheduler import Request
+
+    model = build_model("whisper-base", reduced=True)
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    n, slots, plen, max_new, max_len, n_frames = 4, 2, 8, 8, 64, 12
+    rng = np.random.default_rng(seed + 29)
+    prompts = rng.integers(0, cfg.vocab, (n, plen))
+    frames = rng.standard_normal((n, n_frames, cfg.d_model)) \
+        .astype(np.float32)
+
+    # per-request lockstep oracle: batch=1, so no batching effect at all
+    ref = []
+    for i in range(n):
+        toks, _ = engine.generate_timed(
+            params, jnp.asarray(prompts[i:i + 1], jnp.int32), cfg=cfg,
+            steps=max_new - 1, key=jax.random.PRNGKey(7), temperature=0.0,
+            tp=model.tp, max_len=max_len,
+            frames=jnp.asarray(frames[i:i + 1]))
+        ref.append(tuple(int(t) for t in np.asarray(toks)[0]))
+
+    def reqs(rid0=0):
+        return [Request(rid=rid0 + i,
+                        prompt=tuple(int(t) for t in prompts[i]),
+                        max_new_tokens=max_new, frames=frames[i])
+                for i in range(n)]
+
+    eng = model.serving_engine(params, slots=slots, max_len=max_len,
+                               temperature=0.0, seed=seed,
+                               max_cross_len=n_frames)
+    eng.run(reqs(rid0=-n))                            # compile + warm
+    eng.reset_stats()
+    comps = eng.run(reqs())
+    th = eng.throughput()
+    toks = {c.rid: tuple(c.tokens) for c in comps}
+    if [toks[i] for i in range(n)] != ref:
+        raise RuntimeError(
+            "encdec continuous batching diverged from the lockstep loop: "
+            f"{[toks[i] for i in range(n)]} != {ref}")
+
+    # streaming pass over the same (already compiled) engine
+    eng.reset_stats()
+    streamed = {i: [] for i in range(n)}
+    first_delta_s = None
+    first_event = n_events = 0
+    t0 = time.perf_counter()
+    for rid, delta in eng.stream(reqs()):
+        n_events += 1
+        if first_delta_s is None:
+            first_delta_s = time.perf_counter() - t0
+            first_event = n_events
+        streamed[rid].extend(delta)
+    if first_delta_s is None or first_event >= n_events:
+        raise RuntimeError(
+            "streaming generator yielded no delta before the run's final "
+            f"event ({n_events} events, first at #{first_event})")
+    if [tuple(streamed[i]) for i in range(n)] != ref:
+        raise RuntimeError(
+            "streamed token deltas disagree with the lockstep tokens: "
+            f"{[tuple(streamed[i]) for i in range(n)]} != {ref}")
+    return [
+        (f"{base}/encdec_decode", round(1e6 / max(
+            th["decode_tok_s"], 1e-9), 2),
+         f"{th['decode_tok_s']:.1f}tok/s, cross-KV paged "
+         "(tokens == lockstep)"),
+        (f"{base}/encdec_stream_first_delta",
+         round(first_delta_s * 1e6, 2),
+         f"event {first_event}/{n_events}, tokens == run()"),
+    ]
+
+
 def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
         slots_list=(1, 4, 8), prompt_len: int = 16, max_new: int = 24,
         max_len: int = 64, arrival_rate: float | None = None, seed: int = 0,
@@ -508,6 +606,7 @@ def run(arch: str = "qwen2.5-14b", n_requests: int = 16,
                                  page_size, vocab, seed))
         rows.extend(_sharded_lane(model, params, f"serving/{arch}",
                                   page_size, vocab, seed))
+        rows.extend(_encdec_lane("serving/whisper-base", seed))
     if paged_ok and kv_cache.supports_page_quant(cfg):
         rows.extend(_kv_quant_lane(arch, f"serving/{arch}", seed))
         rows.extend(_swap_lane(model, params, f"serving/{arch}", vocab,

@@ -286,8 +286,10 @@ def prefill_cache_specs(cache_tree, cfg: ModelConfig, mesh):
     """Sharding for a batch=1 prefill cache (``kv_cache.init_cache``
     layout ``[L, B, S, Hkv, hd]``) so admission's output lands head-sharded
     the way ``adopt_slot_paged`` scatters it into the (head-sharded) arena:
-    KV-head axis over ``model`` for 5-D attention leaves, everything else
-    (MLA latents, ssm state, cross-kv) replicated."""
+    KV-head axis over ``model`` for 5-D attention leaves — the encdec
+    self AND cross halves both qualify (both scatter into the same
+    head-sharded arena) — everything else (MLA latents, ssm state)
+    replicated."""
     tp = _tp(mesh)
     kv_tp = "model" if (tp > 1 and cfg.n_kv_heads % tp == 0) else None
 

@@ -8,8 +8,14 @@ free their slot on completion.  Prefill and decode tok/s are reported
 SEPARATELY: the phases sit at different arithmetic intensities, and the
 paper's bandwidth argument is about the decode one.
 
-Families without a continuous-batching path (encdec, and vlm prompts that
-need patch inputs) fall back to a phase-timed lockstep prefill+decode loop.
+encdec (whisper) runs through the engine too: each request carries encoder
+frames, whose projected cross-KV is adopted as read-only arena pages at
+admission (``--enc-chunk`` encodes long audio in fixed windows so one long
+request can't head-of-line-block admission).  ``--stream`` drives the
+engine's streaming generator — tokens print as decode bursts complete
+instead of after the run.  Only vlm (prompts carry patch inputs the
+scheduler has no Request field for) still falls back to a phase-timed
+lockstep prefill+decode loop.
 """
 
 from __future__ import annotations
@@ -63,6 +69,16 @@ def main():
                    help="max new tokens per request")
     p.add_argument("--temperature", type=float, default=1.0)
     p.add_argument("--softmax", default="two_pass")
+    p.add_argument("--enc-frames", type=int, default=None,
+                   help="encdec: encoder frames per request "
+                        "(default: prompt-len)")
+    p.add_argument("--enc-chunk", type=int, default=None,
+                   help="encdec: encode frames in fixed windows of this "
+                        "size, one window per scheduler step (default: "
+                        "whole-sequence encode)")
+    p.add_argument("--stream", action="store_true",
+                   help="drive the streaming generator: print per-request "
+                        "token deltas as decode bursts complete")
     p.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                    help="serve sharded over a ('data', 'model') device "
                         "mesh, e.g. --mesh 2x4: KV heads of every arena "
@@ -96,21 +112,15 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
 
-    if cfg.family == "encdec" or cfg.family == "vlm":
-        # No continuous-batching path (encdec: fixed dec_len; vlm: prompts
-        # carry patch inputs) — lockstep loop, still phase-timed.
+    if cfg.family == "vlm":
+        # No continuous-batching path (prompts carry patch inputs the
+        # scheduler has no Request field for) — lockstep loop, phase-timed.
         from repro.serving import engine
 
         prompt = jax.random.randint(key, (args.slots, args.prompt_len), 0,
                                     cfg.vocab)
-        kw = {}
-        if cfg.family == "encdec":
-            kw["frames"] = jax.random.normal(
-                key, (args.slots, args.prompt_len, cfg.d_model))
-            prompt = prompt[:, :8]
-        if cfg.family == "vlm":
-            kw["patches"] = jax.random.normal(
-                key, (args.slots, cfg.n_patches, cfg.d_model))
+        kw = {"patches": jax.random.normal(
+            key, (args.slots, cfg.n_patches, cfg.d_model))}
         _, st = engine.generate_timed(
             params, prompt, cfg=cfg, steps=args.steps, key=key, tp=model.tp,
             temperature=args.temperature,
@@ -120,6 +130,8 @@ def main():
     else:
         from repro.serving.scheduler import Request
 
+        encdec = cfg.family == "encdec"
+        n_frames = args.enc_frames or args.prompt_len
         eng = model.serving_engine(
             params, slots=args.slots,
             max_len=args.prompt_len + args.steps + 8,
@@ -129,7 +141,9 @@ def main():
             prefix_cache=False if args.no_prefix_cache else "auto",
             mesh=mesh, page_dtype=args.kv_dtype,
             scale_granularity=args.scale_granularity,
-            host_swap_bytes=args.host_swap_bytes)
+            host_swap_bytes=args.host_swap_bytes,
+            **(dict(max_cross_len=n_frames, enc_chunk=args.enc_chunk)
+               if encdec else {}))
         rng = np.random.default_rng(0)
         arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                               args.requests))
@@ -140,9 +154,23 @@ def main():
                             0, cfg.vocab,
                             args.prompt_len - len(head))),
                         max_new_tokens=args.steps,
-                        arrival_s=float(arrivals[i]))
+                        arrival_s=float(arrivals[i]),
+                        frames=(rng.standard_normal(
+                            (n_frames, cfg.d_model)).astype(np.float32)
+                            if encdec else None))
                 for i in range(args.requests)]
-        comps = eng.run(reqs)
+        if args.stream:
+            first_delta = {}
+            n_events = 0
+            for rid, toks in eng.stream(reqs):
+                n_events += 1
+                first_delta.setdefault(rid, n_events)
+            comps = eng.completions
+            print(f"streamed: {n_events} delta events; first delta per "
+                  f"request (event #): "
+                  f"{dict(sorted(first_delta.items()))}")
+        else:
+            comps = eng.run(reqs)
         st = eng.stats
         quant = (f", int8/{eng.scale_granularity} scales"
                  if eng.page_dtype else "")

@@ -470,6 +470,47 @@ def attention(p: dict, x: jax.Array, cos, sin, *, cfg: ModelConfig,
     return layers.dense(p["wo"], o), new_cache
 
 
+def cross_attention_paged(p: dict, x: jax.Array, *, cfg: ModelConfig,
+                          tp: int = 1, kv: dict, cross_table,
+                          cross_lengths):
+    """Ragged READ-ONLY cross-attention over paged encoder K/V (the encdec
+    continuous-batching decode path).  x: [B, 1, d] (one decoder query per
+    slot).  ``kv`` is one layer's page arenas (``{"k", "v"}: [P, ps, Hkv,
+    hd]``) — the same arena self-attention pages into; ``cross_table``
+    ([B, Pmax_x] int32) and ``cross_lengths`` ([B] int32, frame count per
+    slot) address the slot's encoder pages.  Nothing is written: the cross
+    pages were filled once at admission, and ``decode_attention_paged``'s
+    length-prefix mask is exactly the cross mask (every encoder position
+    valid, no causality), so the sweep reuses the paged decode op verbatim.
+    Like whisper's lockstep cross path: no RoPE, no causal/window mask."""
+    b, s, d = x.shape
+    assert s == 1
+    hd = cfg.resolved_head_dim()
+    hq, grouped, _, head_to_kv = head_layout(cfg, tp)
+    hkv = cfg.n_kv_heads
+    seq_par = bool(cfg.decode_seq_parallel)
+    pos_tp = "tp" if seq_par else None
+    hd_tp = None if seq_par else "tp"
+    from repro.kernels import ops as kernel_ops  # lazy: kernels optional
+
+    q = hint(layers.dense(p["wq"], x).reshape(b, s, hq, hd),
+             "dp", None, None if seq_par else "tp", None)
+    kk = hint(kv["k"], pos_tp, None, hd_tp, None)
+    vv = hint(kv["v"], pos_tp, None, hd_tp, None)
+    if grouped:
+        qg = hint(q[:, 0].reshape(b, hkv, hq // hkv, hd),
+                  "dp", hd_tp, None, None)
+    else:                                          # kv expanded per q-head
+        kk = kk[:, :, head_to_kv]
+        vv = vv[:, :, head_to_kv]
+        qg = hint(q[:, 0][:, :, None], "dp", hd_tp, None, None)
+    o = kernel_ops.decode_attention_paged(
+        qg, kk, vv, cross_table, cross_lengths.astype(jnp.int32),
+        scale=hd ** -0.5, window=None, policy=cfg.softmax_policy())
+    o = hint(o.reshape(b, 1, hq * hd), "dp", None, hd_tp)
+    return layers.dense(p["wo"], o)
+
+
 # ---------------------------------------------------------------------------
 # MLA: DeepSeek-V2 Multi-head Latent Attention (compressed KV cache).
 # ---------------------------------------------------------------------------

@@ -69,12 +69,17 @@ def init_block(key, cfg: ModelConfig, tp: int = 1, cross: bool = False,
 def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
                 cache=None, cache_pos=None, enc=None, causal: bool = True,
                 moe_impl: str = "dispatch", ring_valid=None,
-                cache_positions=None, page_table=None):
+                cache_positions=None, page_table=None,
+                cross_table=None, cross_lengths=None):
     """One transformer block.  Returns (x, new_cache).  ``cache_positions``
     ([B] traced) selects the ragged continuous-batching decode path in the
     attention mixers (per-slot write position + length masking);
     ``page_table`` ([B, Pmax]) makes that path read/write a paged cache
-    (arena leaves + per-slot table — see kv_cache.init_paged_pool)."""
+    (arena leaves + per-slot table — see kv_cache.init_paged_pool).
+    ``cross_table``/``cross_lengths`` ([B, Pmax_x] / [B], with the ragged
+    path on an encdec block) address the slot's read-only encoder cross-KV
+    pages in the same arena — the cross mixer becomes a pure paged read
+    (``attn_mod.cross_attention_paged``), never a write."""
     if cfg.family == "ssm":
         if cache is None:
             return rwkv_mod.rwkv_block(p, x, cfg=cfg), None
@@ -114,7 +119,11 @@ def block_apply(p: Params, x, cos, sin, *, cfg: ModelConfig, tp: int = 1,
     new_cache: Any = new_self
     if "xattn" in p:
         hx = layers.rmsnorm(p["ln_x"], x1, eps=cfg.norm_eps)
-        if enc is not None:                      # fresh cross-kv from encoder
+        if cross_table is not None:              # ragged paged cross read
+            xa = attn_mod.cross_attention_paged(
+                p["xattn"], hx, cfg=cfg, tp=tp, kv=cache,
+                cross_table=cross_table, cross_lengths=cross_lengths)
+        elif enc is not None:                    # fresh cross-kv from encoder
             xa, _ = attn_mod.attention(p["xattn"], hx, cos, sin, cfg=cfg,
                                        tp=tp, causal=False, xkv=enc)
         else:                                    # cached cross-kv (decode)

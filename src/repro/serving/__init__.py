@@ -1,3 +1,5 @@
-"""Serving: KV caches + slot pools, prefill/decode steps (lockstep and
-ragged continuous-batching), sampling, generation loop, and the slot-based
-request scheduler (``repro.serving.scheduler``)."""
+"""Serving: KV caches + slot pools (strip and paged, incl. read-only
+cross-KV pages for encoder-decoder models), prefill/decode steps (lockstep
+and ragged continuous-batching), sampling, generation loops, and the
+slot-based request scheduler (``repro.serving.scheduler``) with its
+streaming token API (``ContinuousBatchingEngine.stream``)."""

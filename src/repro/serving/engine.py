@@ -125,12 +125,10 @@ def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
     policy's ``use_kernels`` is set, the jnp (m, n) reference forms
     otherwise.
     """
-    if cfg.family == "encdec":
-        raise NotImplementedError(
-            "continuous batching does not cover the fixed-dec_len "
-            "encoder-decoder path")
     kv, lengths = pool["kv"], pool["lengths"]
     page_table = pool.get("page_table")
+    cross_table = pool.get("cross_table")
+    cross_lengths = pool.get("cross_lengths")
     s = tokens.shape[0]
     if active is None:
         active = lengths > 0
@@ -145,6 +143,10 @@ def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
                                              tp=tp, cache=cl)
             return h2, st
     else:
+        # encdec rides the same body: self-KV pages exactly like dense, and
+        # the block's cross mixer reads the slot's encoder pages through
+        # cross_table/cross_lengths (write-free — see
+        # attention.cross_attention_paged).
         cos, sin = _cos_sin_at(cfg, lengths, s)
 
         def body(h, xs):
@@ -152,7 +154,8 @@ def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
             h2, new_c = transformer.block_apply(
                 pl, h, cos, sin, cfg=cfg, tp=tp, cache=cl,
                 cache_positions=lengths, moe_impl=moe_impl,
-                page_table=page_table)
+                page_table=page_table, cross_table=cross_table,
+                cross_lengths=cross_lengths)
             return h2, new_c
 
     h, new_kv = _layer_loop(cfg, body, x, (params["blocks"], kv))
@@ -162,6 +165,9 @@ def decode_step_ragged(params: Params, pool, tokens, *, cfg: ModelConfig,
     new_pool = {"kv": new_kv, "lengths": new_lengths}
     if page_table is not None:
         new_pool["page_table"] = page_table
+    if cross_table is not None:
+        new_pool["cross_table"] = cross_table
+        new_pool["cross_lengths"] = cross_lengths
     return logits, new_pool
 
 
@@ -197,22 +203,8 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
 
     if cfg.family == "encdec":
         enc = transformer.encode(params, frames, cfg=cfg, tp=tp)
-        # Fill cross-kv caches layer by layer (stacked on L axis).
-        def fill(pl, cl):
-            k = layers.dense(pl["xattn"]["wk"], enc)
-            v = layers.dense(pl["xattn"]["wv"], enc)
-            hd = cfg.resolved_head_dim()
-            cl["cross"]["k"] = k.reshape(b, -1, cfg.n_kv_heads, hd).astype(
-                cl["cross"]["k"].dtype)
-            cl["cross"]["v"] = v.reshape(b, -1, cfg.n_kv_heads, hd).astype(
-                cl["cross"]["v"].dtype)
-            return cl
-
-        cache = jax.vmap(fill, in_axes=(0, 0))(params["blocks"], cache)
-        hd = transformer.decode_with_encoder(params, enc, tokens, cfg=cfg,
-                                             tp=tp)
-        logits = transformer.lm_logits(params, hd[:, -1], cfg=cfg)
-        return logits, cache
+        return prefill_with_encoder(params, enc, tokens, cfg=cfg, tp=tp,
+                                    max_len=max_len, last_pos=last_pos)
 
     if cfg.family == "ssm":
         x = layers.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
@@ -248,6 +240,60 @@ def prefill(params: Params, tokens, *, cfg: ModelConfig, tp: int = 1,
     h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
     h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
     logits = transformer.lm_logits(params, _last(h), cfg=cfg)
+    return logits, new_cache
+
+
+def prefill_with_encoder(params: Params, enc, tokens, *, cfg: ModelConfig,
+                         tp: int = 1, max_len: int | None = None,
+                         last_pos=None):
+    """Decoder-side prefill given already-encoded frames ``enc``
+    ([B, T_enc, d]).  Split out of :func:`prefill` so chunked admission can
+    run the encoder window-by-window across scheduler steps and hand the
+    concatenated states here for ONE decoder pass.
+
+    Projects the per-layer cross-K/V from ``enc`` once (the ``"cross"``
+    cache half — read-only from here on), then runs the decoder blocks with
+    ``cache_pos=0`` so the prompt's self-K/V is WRITTEN as it goes — the
+    old path ran a cache-less ``decode_with_encoder`` and returned a cache
+    whose self half was still zeros, so decode attended empty rows for
+    every prompt position.  Returns (last-token logits, filled
+    ``{"self", "cross"}`` cache); ``last_pos`` as in :func:`prefill`.
+    """
+    b, s = tokens.shape
+    max_len = max(max_len or 0, s)
+    cache = kv_cache.init_cache(cfg, b, max_len, tp, ring=False)
+
+    # Fill cross-kv layer by layer (stacked on L axis): the leaf is REPLACED
+    # wholesale, so its position extent is exactly T_enc.
+    def fill(pl, cl):
+        k = layers.dense(pl["xattn"]["wk"], enc)
+        v = layers.dense(pl["xattn"]["wv"], enc)
+        hd = cfg.resolved_head_dim()
+        cl["cross"]["k"] = k.reshape(b, -1, cfg.n_kv_heads, hd).astype(
+            cl["cross"]["k"].dtype)
+        cl["cross"]["v"] = v.reshape(b, -1, cfg.n_kv_heads, hd).astype(
+            cl["cross"]["v"].dtype)
+        return cl
+
+    cache = jax.vmap(fill, in_axes=(0, 0))(params["blocks"], cache)
+    x = layers.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    cos, sin = transformer._cos_sin(
+        cfg, transformer._positions_for(cfg, b, s))
+
+    def body(h, xs):
+        pl, cl = xs
+        h2, new_c = transformer.block_apply(pl, h, cos, sin, cfg=cfg, tp=tp,
+                                            cache=cl, cache_pos=0, enc=enc)
+        return h2, new_c
+
+    h, new_cache = _layer_loop(cfg, body, x, (params["blocks"], cache))
+    h = layers.rmsnorm(params["norm_f"], h, eps=cfg.norm_eps)
+    if last_pos is None:
+        hl = h[:, -1]
+    else:
+        hl = h[jnp.arange(b), jnp.broadcast_to(
+            jnp.asarray(last_pos, jnp.int32), (b,))]
+    logits = transformer.lm_logits(params, hl, cfg=cfg)
     return logits, new_cache
 
 

@@ -85,12 +85,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int = 1,
             "kr": jnp.zeros((ls, batch, max_len, m.qk_rope_head_dim), dt),
         }
     if cfg.family == "encdec":
+        # self-KV is position-addressed over the DECODER sequence exactly
+        # like dense (it used to allocate cfg.dec_len, which silently capped
+        # decode at the training decoder length); cross-KV leaves are
+        # placeholders the prefill's encoder fill replaces wholesale with
+        # the true frame count.
         return {
             "self": {
-                "k": jnp.zeros((ls, batch, cfg.dec_len, cfg.n_kv_heads, hd),
-                               dt),
-                "v": jnp.zeros((ls, batch, cfg.dec_len, cfg.n_kv_heads, hd),
-                               dt),
+                "k": jnp.zeros((ls, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((ls, batch, max_len, cfg.n_kv_heads, hd), dt),
             },
             # cross-kv filled from encoder output at prefill
             "cross": {
@@ -153,9 +156,12 @@ TRASH_PAGE = 0          # arena page 0: write target for dead/inactive rows
 
 def supports_paging(cfg: ModelConfig) -> bool:
     """Families whose decode cache is position-addressed (pageable).  ssm
-    state has no position axis; encdec has no continuous-batching path at
-    all.  hybrid pages its attention half and keeps ssm state slot-major."""
-    return cfg.family not in ("ssm", "encdec")
+    state has no position axis and stays on the strip pool.  encdec pages
+    BOTH halves: self-attention KV exactly like dense, and the encoder's
+    cross-KV as read-only pages in the SAME arena (written once at
+    admission, addressed by a separate per-slot ``cross_table``).  hybrid
+    pages its attention half and keeps ssm state slot-major."""
+    return cfg.family != "ssm"
 
 
 def resolve_page_size(cfg: ModelConfig, max_len: int,
@@ -219,15 +225,19 @@ def supports_page_quant(cfg: ModelConfig) -> bool:
     arenas (dense / moe / vlm).  MLA stores latents (a different numeric
     regime — quantizing ``c`` compounds through two projections) and hybrid
     carries slot-major ssm state next to its pages; both keep full-precision
-    pages."""
-    return supports_paging(cfg) and cfg.mla is None and cfg.family != "hybrid"
+    pages.  encdec keeps full precision too for now: its cross pages are
+    written once and read every step, so quantizing them needs its own
+    error budget (a follow-on, see ROADMAP)."""
+    return (supports_paging(cfg) and cfg.mla is None
+            and cfg.family not in ("hybrid", "encdec"))
 
 
 def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
                     *, page_size: int | None = None,
                     pages: int | None = None, mesh=None,
                     page_dtype: str | None = None,
-                    scale_granularity: str | None = None) -> dict:
+                    scale_granularity: str | None = None,
+                    cross_len: int | None = None) -> dict:
     """A paged KV pool: shared page arena + per-slot page table.
 
     Returns ``{"kv": <stacked-layer page arenas>, "page_table":
@@ -239,6 +249,15 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
     then bounded by total tokens in flight, the point of paging.  Table
     entries init to the trash page; ``lengths`` semantics match the strip
     pool (:func:`init_slot_pool`).
+
+    encdec pools carry TWO tables over ONE arena: the encoder's cross-KV
+    has the same per-position leaf shape as self-KV, so cross pages live in
+    the same ``k``/``v`` arenas (one allocator, one refcount space) and the
+    extra ``cross_table`` int32[slots, ceil(cross_len / ps)] +
+    ``cross_lengths`` int32[slots] address them.  Cross pages are written
+    once at admission and only read afterwards.  ``cross_len`` (default
+    ``max_len``) bounds a request's encoder frames; the default ``pages``
+    provisioning covers both tables.
 
     ``page_dtype="int8"`` (flat k/v families only, see
     :func:`supports_page_quant`) stores the arenas as symmetric-absmax int8
@@ -272,8 +291,11 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
     else:
         ps = resolve_page_size(cfg, max_len, page_size)
     n_tab = pages_per_slot(max_len, ps)
+    n_xtab = 0
+    if cfg.family == "encdec":
+        n_xtab = pages_per_slot(cross_len or max_len, ps)
     if pages is None:
-        pages = 1 + slots * n_tab
+        pages = 1 + slots * (n_tab + n_xtab)
     dt = cache_dtype(cfg)
     hd = cfg.resolved_head_dim()
     ls = cfg.n_layers
@@ -296,12 +318,15 @@ def init_paged_pool(cfg: ModelConfig, slots: int, max_len: int, tp: int = 1,
               "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), jnp.int8),
               "k_scale": jnp.zeros(sshape, jnp.float32),
               "v_scale": jnp.zeros(sshape, jnp.float32)}
-    else:                                          # dense / moe / vlm
+    else:                                          # dense / moe / vlm / encdec
         kv = {"k": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt),
               "v": jnp.zeros((ls, pages, ps, cfg.n_kv_heads, hd), dt)}
     pool = {"kv": kv,
             "page_table": jnp.zeros((slots, n_tab), jnp.int32),
             "lengths": jnp.zeros((slots,), jnp.int32)}
+    if cfg.family == "encdec":
+        pool["cross_table"] = jnp.zeros((slots, n_xtab), jnp.int32)
+        pool["cross_lengths"] = jnp.zeros((slots,), jnp.int32)
     return shard_pool(pool, cfg, mesh) if mesh is not None else pool
 
 
@@ -419,13 +444,62 @@ def adopt_slot_paged(pool: dict, cache, slot, length, page_row,
                 jnp.asarray(length, jnp.int32))}
 
 
+def _pad_to_pages(src, ps: int):
+    """Zero-pad a batch=1 position-major cache leaf ``[L, 1, T, ...]`` on
+    the position axis up to a whole number of ``ps``-sized pages (static
+    shapes, jit-safe).  The pad rows land in the tail page beyond the
+    slot's length and are masked by the length-prefix read."""
+    t = src.shape[2]
+    rem = (-t) % ps
+    if rem == 0:
+        return src
+    pad = jnp.zeros((src.shape[0], src.shape[1], rem, *src.shape[3:]),
+                    src.dtype)
+    return jnp.concatenate([src, pad], axis=2)
+
+
+def adopt_slot_encdec(pool: dict, cache, slot, length, page_row,
+                      cross_len, cross_row) -> dict:
+    """Admit a freshly prefilled encdec cache (``{"self": {k, v}, "cross":
+    {k, v}}``, batch=1) into ``slot``: the decoder's self-KV scatters
+    through ``page_row`` exactly like :func:`adopt_slot_paged`, and the
+    encoder's cross-KV scatters through ``cross_row`` into the SAME
+    arenas.  The cross half is never written again — decode only reads it
+    through ``cross_table`` — so these pages behave like refcounted prefix
+    pages until retirement frees them.  The cross cache's frame count need
+    not be page-aligned; the tail page is zero-padded in here and hidden
+    behind ``cross_lengths``."""
+    kv = pool["kv"]
+    ps = kv["k"].shape[2]
+    new_kv = {n: _copy_pages(kv[n], cache["self"][n], page_row)
+              for n in ("k", "v")}
+    new_kv = {n: _copy_pages(new_kv[n],
+                             _pad_to_pages(cache["cross"][n], ps), cross_row)
+              for n in ("k", "v")}
+    return {**pool, "kv": new_kv,
+            "page_table": pool["page_table"].at[slot].set(
+                page_row.astype(jnp.int32)),
+            "lengths": pool["lengths"].at[slot].set(
+                jnp.asarray(length, jnp.int32)),
+            "cross_table": pool["cross_table"].at[slot].set(
+                cross_row.astype(jnp.int32)),
+            "cross_lengths": pool["cross_lengths"].at[slot].set(
+                jnp.asarray(cross_len, jnp.int32))}
+
+
 def free_slot_paged(pool: dict, slot) -> dict:
     """Mark ``slot`` free: length 0, table row reset to the trash page (so
     the dead writes the jitted step still issues for it can't corrupt pages
-    the allocator hands to someone else)."""
-    return {"kv": pool["kv"],
-            "page_table": pool["page_table"].at[slot].set(TRASH_PAGE),
-            "lengths": pool["lengths"].at[slot].set(0)}
+    the allocator hands to someone else).  encdec pools also reset the
+    slot's cross table/length (cross pages are read-only, but a stale row
+    must not alias pages the allocator re-hands out)."""
+    out = {**pool,
+           "page_table": pool["page_table"].at[slot].set(TRASH_PAGE),
+           "lengths": pool["lengths"].at[slot].set(0)}
+    if "cross_table" in pool:
+        out["cross_table"] = pool["cross_table"].at[slot].set(TRASH_PAGE)
+        out["cross_lengths"] = pool["cross_lengths"].at[slot].set(0)
+    return out
 
 
 def set_page_row(pool: dict, slot, page_row) -> dict:

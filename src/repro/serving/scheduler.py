@@ -51,6 +51,7 @@ jit-threaded pytree.
 from __future__ import annotations
 
 import contextlib
+import functools
 import time
 from dataclasses import dataclass, field
 
@@ -61,6 +62,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.distributed import autoshard
 from repro.distributed import sharding as dist_sharding
+from repro.models import transformer
 from repro.serving import engine, kv_cache
 from repro.serving.prefix_cache import PrefixCache
 
@@ -70,8 +72,10 @@ from repro.serving.prefix_cache import PrefixCache
 # through prefill (padding would pollute the state); moe's capacity
 # dispatch sizes expert capacity from the PADDED length and drops tokens
 # against it, so pad tokens can displace real ones — both families must
-# see exact-length prompts.
-_BUCKETABLE_FAMILIES = ("dense", "vlm")
+# see exact-length prompts.  encdec's decoder prefill is position-local
+# too (causal self-attention; cross-attention is per-position over the
+# encoder states), so its decoder prompts bucket like dense.
+_BUCKETABLE_FAMILIES = ("dense", "vlm", "encdec")
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -99,13 +103,17 @@ class Request:
     ``resumed`` marks a requeue after a page preemption: its prompt is
     the ORIGINAL prompt plus the tokens generated before eviction
     (recompute on readmission), and admission failures retire it with
-    what it produced instead of raising.
+    what it produced instead of raising.  ``frames`` (encdec only) are
+    the request's encoder frame embeddings ``[T_enc, d_model]``; they
+    travel with the request through preemption so readmission can
+    re-encode.
     """
     rid: int
     prompt: tuple[int, ...]            # prompt token ids
     max_new_tokens: int = 32
     arrival_s: float = 0.0             # offset from ``run()`` start
     resumed: bool = False              # requeued after a page preemption
+    frames: np.ndarray | None = None   # encdec: [T_enc, d_model] embeddings
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -174,19 +182,32 @@ class ContinuousBatchingEngine:
                  prefix_cache: bool | str = "auto", mesh=None,
                  page_dtype: str | None = None,
                  scale_granularity: str | None = None,
-                 host_swap_bytes: int | None = None):
+                 host_swap_bytes: int | None = None,
+                 max_cross_len: int | None = None,
+                 enc_chunk: int | None = None):
         cfg = model.cfg
         self.mesh = mesh
-        if cfg.family == "encdec":
-            raise NotImplementedError(
-                "continuous batching does not cover the encoder-decoder "
-                "family (fixed dec_len decode); use engine.generate")
         if paged == "auto":
             paged = kv_cache.supports_paging(cfg)
         elif paged and not kv_cache.supports_paging(cfg):
             raise ValueError(f"family {cfg.family!r} has no pageable cache")
+        if cfg.family == "encdec" and not paged:
+            raise ValueError(
+                "encdec serving needs the paged pool: the encoder's "
+                "cross-KV lives as read-only arena pages (cross_table); "
+                "the strip pool has nowhere to put it")
         self.paged = bool(paged)
         self.max_len = int(max_len)
+        # encdec: bound on a request's encoder frames (its cross pages are
+        # sized/validated against this); chunked admission encodes
+        # ``enc_chunk`` frames per scheduler step so one long request
+        # cannot head-of-line-block admission (each window is encoded
+        # independently — streaming-window semantics; None = whole-sequence
+        # encode, bit-identical to the lockstep oracle).
+        self.max_cross_len = int(max_cross_len or max_len)
+        self.enc_chunk = int(enc_chunk) if enc_chunk else None
+        if enc_chunk is not None and cfg.family != "encdec":
+            raise ValueError("enc_chunk only applies to the encdec family")
         self.page_dtype = page_dtype
         self.scale_granularity: str | None = None
         if page_dtype is not None:
@@ -249,16 +270,24 @@ class ContinuousBatchingEngine:
         if self.paged:
             self.pages_per_slot = kv_cache.pages_per_slot(self.max_len,
                                                           self.page_size)
+            self.cross_pages_per_slot = (
+                kv_cache.pages_per_slot(self.max_cross_len, self.page_size)
+                if cfg.family == "encdec" else 0)
             if pages is None:
-                pages = 1 + self.n_slots * self.pages_per_slot
+                pages = 1 + self.n_slots * (self.pages_per_slot
+                                            + self.cross_pages_per_slot)
             self.pool = kv_cache.init_paged_pool(
                 cfg, self.n_slots, self.max_len, model.tp,
                 page_size=self.page_size, pages=int(pages), mesh=mesh,
                 page_dtype=page_dtype,
-                scale_granularity=self.scale_granularity)
+                scale_granularity=self.scale_granularity,
+                cross_len=(self.max_cross_len if cfg.family == "encdec"
+                           else None))
             self.allocator = kv_cache.PageAllocator(int(pages))
             self.slot_pages: list[list[int]] = [[] for _ in
                                                 range(self.n_slots)]
+            self.slot_cross_pages: list[list[int]] = [[] for _ in
+                                                      range(self.n_slots)]
         else:
             self.pool = kv_cache.init_slot_pool(cfg, self.n_slots,
                                                 self.max_len, model.tp)
@@ -279,6 +308,11 @@ class ContinuousBatchingEngine:
                     "host swap does not cover the hybrid family: its "
                     "recurrent ssm state is slot-major, not paged, and "
                     "would be lost at demotion")
+            if cfg.family == "encdec":
+                raise ValueError(
+                    "host swap does not cover the encdec family yet: the "
+                    "demotion blob gathers only the slot's self-KV page "
+                    "row, so its cross pages would be stranded")
             self.host_swap = kv_cache.HostSwapStore(int(host_swap_bytes))
 
         self.buckets = self._resolve_buckets(prefill_buckets)
@@ -342,6 +376,14 @@ class ContinuousBatchingEngine:
                 jax.jit(kv_cache.set_page_row, **pool_kw))
             self._restore = self._with_mesh(
                 jax.jit(kv_cache.restore_slot_paged, **pool_kw))
+            if cfg.family == "encdec":
+                self._adopt_encdec = self._with_mesh(
+                    jax.jit(kv_cache.adopt_slot_encdec, **pool_kw))
+                # one jit; recompiles per frame-count shape (chunked
+                # admission keeps chunk shapes fixed at enc_chunk + one
+                # tail length per distinct T_enc % enc_chunk)
+                self._encode = self._with_mesh(jax.jit(functools.partial(
+                    transformer.encode, cfg=cfg, tp=model.tp)))
         else:
             self._adopt = self._with_mesh(
                 jax.jit(kv_cache.adopt_slot, **pool_kw))
@@ -354,6 +396,10 @@ class ContinuousBatchingEngine:
         self.next_tok = np.zeros((self.n_slots,), np.int64)
         self.pending: list[Request] = []
         self.completions: list[Completion] = []
+        # encdec chunked admission: slot -> in-flight encode state (pages
+        # already reserved, encoder windows still running).  The slot is
+        # neither free nor active until the encode completes.
+        self._encoding: dict[int, dict] = {}
         self._carried: dict[int, tuple[int, list[int], float | None]] = {}
         self._admit_seq = 0
         self._run_start: float | None = None
@@ -419,13 +465,27 @@ class ContinuousBatchingEngine:
             cfg, tp, moe_impl = self.cfg, self.model.tp, self._moe_impl
             temperature, mesh = self.temperature, self.mesh
 
-            def _fused_prefill(params, prompt, key, last_pos):
-                logits, cache = engine.prefill(
-                    params, prompt, cfg=cfg, tp=tp, max_len=alloc_len,
-                    moe_impl=moe_impl, last_pos=last_pos)
-                tok = engine.sample_token(logits, key, temperature, cfg=cfg,
-                                          vocab=cfg.vocab)
-                return tok.astype(jnp.int32), _pin_cache(cache, cfg, mesh)
+            if cfg.family == "encdec":
+                # decoder-side prefill over already-encoded frames: the
+                # encoder ran separately (possibly chunk-by-chunk across
+                # scheduler steps) so ``enc`` arrives as an argument.
+                def _fused_prefill(params, enc, prompt, key, last_pos):
+                    logits, cache = engine.prefill_with_encoder(
+                        params, enc, prompt, cfg=cfg, tp=tp,
+                        max_len=alloc_len, last_pos=last_pos)
+                    tok = engine.sample_token(logits, key, temperature,
+                                              cfg=cfg, vocab=cfg.vocab)
+                    return tok.astype(jnp.int32), _pin_cache(cache, cfg,
+                                                             mesh)
+            else:
+                def _fused_prefill(params, prompt, key, last_pos):
+                    logits, cache = engine.prefill(
+                        params, prompt, cfg=cfg, tp=tp, max_len=alloc_len,
+                        moe_impl=moe_impl, last_pos=last_pos)
+                    tok = engine.sample_token(logits, key, temperature,
+                                              cfg=cfg, vocab=cfg.vocab)
+                    return tok.astype(jnp.int32), _pin_cache(cache, cfg,
+                                                             mesh)
 
             fn = self._with_mesh(jax.jit(_fused_prefill))
             self._prefill_fns[alloc_len] = fn
@@ -520,10 +580,21 @@ class ContinuousBatchingEngine:
                 f"request {req.rid}: prompt {plen} + "
                 f"{req.max_new_tokens} new tokens exceeds max_len "
                 f"{self.max_len}")
-        if self.paged and self._pages_for(plen) > self.allocator.usable_pages:
+        need = self._pages_for(plen) if self.paged else 0
+        if self.cfg.family == "encdec":
+            if req.frames is None:
+                raise ValueError(
+                    f"request {req.rid}: encdec requests need frames")
+            t_enc = int(req.frames.shape[0])
+            if t_enc > self.max_cross_len:
+                raise ValueError(
+                    f"request {req.rid}: {t_enc} encoder frames exceed "
+                    f"max_cross_len {self.max_cross_len}")
+            need += self._pages_for(t_enc)
+        if self.paged and need > self.allocator.usable_pages:
             raise ValueError(
                 f"request {req.rid}: prompt {plen} needs "
-                f"{self._pages_for(plen)} pages; the pool has "
+                f"{need} pages; the pool has "
                 f"{self.allocator.usable_pages} (page_size {self.page_size})")
         self.pending.append(req)
         self.pending.sort(key=lambda r: r.arrival_s)
@@ -531,8 +602,10 @@ class ContinuousBatchingEngine:
     def free_slots(self) -> list[int]:
         """Slots with no owner — admission targets, backfilled between
         decode bursts (host-side view; the device-side marker is
-        ``lengths[slot] == 0``)."""
-        return [i for i, o in enumerate(self.slot_owner) if o is None]
+        ``lengths[slot] == 0``).  Slots mid-way through a chunked encode
+        are reserved (pages held, not yet decoding) and excluded."""
+        return [i for i, o in enumerate(self.slot_owner)
+                if o is None and i not in self._encoding]
 
     def active_slots(self) -> list[int]:
         """Slots currently owned by an in-flight request (the rows the
@@ -552,6 +625,15 @@ class ContinuousBatchingEngine:
         row[:len(ids)] = ids
         return row
 
+    def _cross_row(self, slot: int) -> np.ndarray:
+        """The slot's cross-table row (encdec): its cross pages,
+        trash-padded to the fixed table width like :meth:`_page_row`."""
+        row = np.full((self.cross_pages_per_slot,), kv_cache.TRASH_PAGE,
+                      np.int32)
+        ids = self.slot_cross_pages[slot]
+        row[:len(ids)] = ids
+        return row
+
     def _note_peak(self) -> None:
         used = self.allocator.usable_pages - self.allocator.free_pages
         self.stats["peak_pages"] = max(self.stats["peak_pages"], used)
@@ -563,12 +645,17 @@ class ContinuousBatchingEngine:
         if self.paged:
             self.allocator.free(self.slot_pages[slot])
             self.slot_pages[slot] = []
+            if self.slot_cross_pages[slot]:
+                self.allocator.free(self.slot_cross_pages[slot])
+                self.slot_cross_pages[slot] = []
         self.pool = self._free(self.pool, np.int32(slot))
 
     # -- admission: prefill into a free slot ---------------------------------
     def _admit(self, req: Request, slot: int, now: float) -> bool:
         """Prefill ``req`` into ``slot``.  Returns False (nothing consumed)
         when the page pool cannot back the prompt right now."""
+        if self.cfg.family == "encdec":
+            return self._admit_encdec(req, slot, now)
         plen = len(req.prompt)
         if plen + req.max_new_tokens > self.max_len:
             raise ValueError(
@@ -674,6 +761,114 @@ class ContinuousBatchingEngine:
         self._maybe_retire(slot, now)        # max_new_tokens == 1 edge
         return True
 
+    def _admit_encdec(self, req: Request, slot: int, now: float) -> bool:
+        """encdec admission: reserve self + cross pages up-front (one
+        all-or-nothing allocation), then encode the frames — wholesale, or
+        one ``enc_chunk`` window per scheduler step so a long request
+        cannot head-of-line-block admission (the slot PARKS in
+        ``self._encoding`` and other requests keep admitting into the
+        remaining slots).  The decoder-prompt prefill + adoption happen in
+        :meth:`_finish_encdec` once the last window lands."""
+        plen = len(req.prompt)
+        if req.frames is None:
+            raise ValueError(f"request {req.rid}: encdec requests need "
+                             "frames")
+        t_enc = int(req.frames.shape[0])
+        if plen + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + {req.max_new_tokens} "
+                f"new tokens exceeds max_len {self.max_len}")
+        if t_enc > self.max_cross_len:
+            raise ValueError(
+                f"request {req.rid}: {t_enc} encoder frames exceed "
+                f"max_cross_len {self.max_cross_len}")
+        need = self._pages_for(plen) + self._pages_for(t_enc)
+        if need > self.allocator.usable_pages:
+            if req.resumed:
+                self._finalize_oom(req, now)
+                return True
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + {t_enc} frames need "
+                f"{need} pages; the pool has {self.allocator.usable_pages} "
+                f"(page_size {self.page_size})")
+        page_ids = self._alloc_pages(need)
+        if page_ids is None:
+            return False
+        n_self = self._pages_for(plen)
+        self.slot_pages[slot] = page_ids[:n_self]
+        self.slot_cross_pages[slot] = page_ids[n_self:]
+        ent = dict(req=req, parts=[], off=0, t0=time.perf_counter(),
+                   admit_s=now)
+        if self.enc_chunk is None:
+            t0 = time.perf_counter()
+            enc = self._encode(self.params, jnp.asarray(req.frames)[None])
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            self._finish_encdec(slot, ent, enc, now)
+        else:
+            self._encoding[slot] = ent
+        return True
+
+    def _advance_encoding(self, now: float) -> None:
+        """Encode ONE ``enc_chunk`` window for every parked slot (called
+        once per scheduler step, between admission and the decode burst).
+        Each window is encoded independently — bidirectional attention
+        within the window only, real-time streaming-encoder semantics —
+        and the windows are concatenated on the position axis when the
+        last one lands."""
+        for slot in list(self._encoding):
+            ent = self._encoding[slot]
+            frames = ent["req"].frames
+            t_enc = int(frames.shape[0])
+            t0 = time.perf_counter()
+            end = min(t_enc, ent["off"] + self.enc_chunk)
+            part = self._encode(self.params,
+                                jnp.asarray(frames[ent["off"]:end])[None])
+            ent["parts"].append(part)
+            ent["off"] = end
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            if end >= t_enc:
+                del self._encoding[slot]
+                enc = jnp.concatenate(ent["parts"], axis=1)
+                self._finish_encdec(slot, ent, enc, now)
+
+    def _finish_encdec(self, slot: int, ent: dict, enc, now: float) -> None:
+        """Complete an encdec admission: decoder-prompt prefill against the
+        encoded frames (self-KV written, cross-KV projected once), adopt
+        both halves into the arena through their tables, sample the first
+        token."""
+        req = ent["req"]
+        plen = len(req.prompt)
+        t_enc = int(req.frames.shape[0])
+        bucket = self._bucket_for(plen)
+        alloc_len = _round_up(bucket, self.page_size)
+        t0 = time.perf_counter()
+        self.key, sub = jax.random.split(self.key)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = req.prompt
+        tok, cache = self._prefill_fn(alloc_len)(
+            self.params, enc, padded, sub, np.int32(plen - 1))
+        self._prefill_shapes.add((bucket, alloc_len))
+        self.pool = self._adopt_encdec(
+            self.pool, cache, np.int32(slot), np.int32(plen),
+            self._page_row(slot), np.int32(t_enc), self._cross_row(slot))
+        self._note_peak()
+        tok = int(jax.block_until_ready(tok)[0])
+        t1 = time.perf_counter()
+        self.stats["prefill_s"] += t1 - t0
+        self.stats["prefill_tokens"] += plen + t_enc
+        self.stats["admitted"] += 1
+        self._admit_seq += 1
+        comp = Completion(rid=req.rid, slot=slot, prompt_len=plen,
+                          max_new_tokens=req.max_new_tokens,
+                          admitted_s=ent["admit_s"], seq=self._admit_seq)
+        comp.ttft_s = (max(0.0, t1 - self._run_start - req.arrival_s)
+                       if self._run_start is not None else t1 - ent["t0"])
+        self.slot_owner[slot] = comp
+        self.slot_req[slot] = req
+        comp.tokens.append(tok)
+        self.next_tok[slot] = tok
+        self._maybe_retire(slot, now)        # max_new_tokens == 1 edge
+
     def _admit_arrived(self, now: float) -> None:
         free = self.free_slots()
         # promote swapped-out work before admitting anything new: a demotee
@@ -737,7 +932,8 @@ class ContinuousBatchingEngine:
         remaining = comp.max_new_tokens - len(comp.tokens)
         self.pending.insert(0, Request(
             rid=comp.rid, prompt=tuple(req.prompt) + tuple(comp.tokens),
-            max_new_tokens=max(1, remaining), arrival_s=0.0, resumed=True))
+            max_new_tokens=max(1, remaining), arrival_s=0.0, resumed=True,
+            frames=req.frames))
         self._release_slot(slot)
         self.stats["preempted"] += 1
 
@@ -877,6 +1073,8 @@ class ContinuousBatchingEngine:
             return 1                     # token values gate retirement
         if self.pending and self.free_slots():
             return 1                     # open-loop traffic: admit promptly
+        if self._encoding:
+            return 1                     # chunked encodes advance per step
         rem = min(c.max_new_tokens - len(c.tokens) for c in comps)
         head = min(self.max_len - (c.prompt_len + len(c.tokens))
                    for c in comps)
@@ -889,9 +1087,11 @@ class ContinuousBatchingEngine:
         if now is None:
             now = 0.0
         self._admit_arrived(now)
+        if self._encoding:
+            self._advance_encoding(now)
         active = self.active_slots()
         if not active:
-            return False
+            return bool(self._encoding)
         runahead = self._runahead([self.slot_owner[s] for s in active])
         if self.paged:
             runahead = self._ensure_pages(runahead, now)
@@ -945,7 +1145,8 @@ class ContinuousBatchingEngine:
                 req.arrival_s = 0.0
         start = time.perf_counter()
         self._run_start = start
-        while self.pending or self.active_slots() or self._swapped:
+        while (self.pending or self.active_slots() or self._swapped
+               or self._encoding):
             now = (time.perf_counter() - start) if use_wall_clock else 0.0
             progressed = self.step(now=now)
             if not progressed and self.pending:
@@ -955,6 +1156,66 @@ class ContinuousBatchingEngine:
                     time.sleep(min(wait, 0.05))
         self.completions.sort(key=lambda c: c.rid)
         return self.completions
+
+    def stream(self, requests=None, *, use_wall_clock: bool | None = None):
+        """Serve like :meth:`run`, but YIELD tokens as they are produced:
+        a generator of ``(rid, [token, ...])`` deltas, emitted after every
+        scheduler step for each request that gained tokens in that step —
+        a request streams while slower batch members are still decoding,
+        instead of everything surfacing at the end.
+
+        Every family benefits (the decode burst already advances slots
+        independently; this just drains the host-side token lists
+        incrementally).  Preemption-safe: a preempted request's
+        already-yielded tokens are not re-yielded after readmission — the
+        carried-token accounting below treats the stream for one ``rid``
+        as a single monotone sequence.  After the generator is exhausted,
+        ``self.completions`` holds the same Completion list ``run`` would
+        have returned.
+        """
+        for req in requests or ():
+            self.submit(req)
+        if use_wall_clock is None:
+            use_wall_clock = any(r.arrival_s > 0 for r in self.pending)
+        if not use_wall_clock:
+            for req in self.pending:
+                req.arrival_s = 0.0
+        start = time.perf_counter()
+        self._run_start = start
+        emitted: dict[int, int] = {}
+
+        def _deltas():
+            # one monotone token view per rid: tokens carried across
+            # preemptions, then the live/finished completion's own tokens
+            views = []
+            for slot in self.active_slots():
+                comp = self.slot_owner[slot]
+                prior = self._carried.get(comp.rid, (0, [], None))[1]
+                views.append((comp.rid, prior + comp.tokens))
+            for ent in self._swapped.values():
+                comp = ent["comp"]
+                prior = self._carried.get(comp.rid, (0, [], None))[1]
+                views.append((comp.rid, prior + comp.tokens))
+            for comp in self.completions:
+                views.append((comp.rid, comp.tokens))
+            out = []
+            for rid, toks in views:
+                n = emitted.get(rid, 0)
+                if len(toks) > n:
+                    out.append((rid, [int(t) for t in toks[n:]]))
+                    emitted[rid] = len(toks)
+            return out
+
+        while (self.pending or self.active_slots() or self._swapped
+               or self._encoding):
+            now = (time.perf_counter() - start) if use_wall_clock else 0.0
+            progressed = self.step(now=now)
+            yield from _deltas()
+            if not progressed and self.pending:
+                wait = self.pending[0].arrival_s - now
+                if use_wall_clock and wait > 0:
+                    time.sleep(min(wait, 0.05))
+        self.completions.sort(key=lambda c: c.rid)
 
     def reset_stats(self) -> None:
         """Zero the throughput counters + completions (keeps compiled fns):

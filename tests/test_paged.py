@@ -1,9 +1,10 @@
 """Paged KV cache tests: the decode_attention_paged registry op, the page
-arena / page-table pool (adopt, free, allocator, budgeting), paged-vs-strip
-ragged decode parity, and the scheduler's paged edge cases (page-capacity
-rejection, EOS-frees-pages, preemption, bucketed prefill)."""
+arena / page-table pool (adopt, free, allocator, budgeting), and the
+scheduler's paged edge cases (page-capacity rejection, EOS-frees-pages,
+preemption, bucketed prefill).  Paged-vs-lockstep token parity is the
+per-family matrix in test_family_parity.py; allocator/refcount invariants
+under random action sequences are test_serving_invariants.py."""
 
-import functools
 import tempfile
 
 import jax
@@ -159,49 +160,6 @@ class TestPagedPool:
         # the acceptance claim: >= 2x the strip concurrency, page-backed
         per_req = -(-(max_len // 4) // 16)
         assert min(slots, (pages - 1) // per_req) >= 2 * 4
-
-
-# ---------------------------------------------------------------------------
-# Paged ragged decode == strip ragged decode (the strip path is itself
-# validated against per-sequence decode in test_scheduler).
-# ---------------------------------------------------------------------------
-@pytest.mark.parametrize("arch", [
-    "qwen2.5-14b",                               # dense GQA, grouped
-    pytest.param("deepseek-v2-lite-16b",
-                 marks=pytest.mark.slow),        # MLA latent pages
-    pytest.param("hymba-1.5b", marks=pytest.mark.slow),    # hybrid: attn
-    pytest.param("h2o-danube-3-4b", marks=pytest.mark.slow),  # SWA mask
-])
-def test_paged_ragged_matches_strip_ragged(arch):
-    m = build_model(arch, reduced=True)
-    cfg = m.cfg
-    params = m.init(KEY)
-    plens = [3, 5, 7]
-    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0, cfg.vocab)
-    max_len, ps, steps = 32, 8, 6
-    npp = kv_cache.pages_per_slot(max_len, ps)
-    spool = kv_cache.init_slot_pool(cfg, 3, max_len)
-    ppool = kv_cache.init_paged_pool(cfg, 3, max_len, page_size=ps)
-    alloc = kv_cache.PageAllocator(1 + 3 * npp)
-    for i in range(3):
-        _, c = engine.prefill(params, toks[i:i + 1, :plens[i]], cfg=cfg,
-                              max_len=max_len)
-        spool = kv_cache.adopt_slot(spool, c, i, plens[i])
-        _, cp = engine.prefill(params, toks[i:i + 1, :plens[i]], cfg=cfg,
-                               max_len=-(-plens[i] // ps) * ps)
-        need = -(-(plens[i] + steps) // ps)          # whole decode horizon
-        row = jnp.zeros((npp,), jnp.int32).at[:need].set(
-            jnp.asarray(alloc.alloc(need)))
-        ppool = kv_cache.adopt_slot_paged(ppool, cp, i, plens[i], row)
-    rstep = jax.jit(functools.partial(engine.decode_step_ragged, cfg=cfg))
-    for t in range(steps):
-        tok = jnp.array([toks[i, plens[i] + t] for i in range(3)], jnp.int32)
-        lg_s, spool = rstep(params, spool, tok)
-        lg_p, ppool = rstep(params, ppool, tok)
-        np.testing.assert_allclose(
-            np.asarray(lg_p[:, :cfg.vocab]), np.asarray(lg_s[:, :cfg.vocab]),
-            atol=2e-3, err_msg=f"{arch} step {t}")
-        assert ppool["lengths"].tolist() == spool["lengths"].tolist()
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,7 @@
 """Continuous-batching tests: the decode_attention registry op, ragged
-slot-pool decode vs per-sequence sequential decode (including mid-run
-eviction + refill), the request scheduler, and slot memory budgeting."""
+slot-pool mechanics (mid-run eviction + refill, inactive slots), the
+request scheduler, and slot memory budgeting.  Per-family ragged-vs-
+lockstep parity is the matrix in test_family_parity.py."""
 
 import functools
 import tempfile
@@ -103,27 +104,9 @@ class TestDecodeAttentionOp:
 
 
 # ---------------------------------------------------------------------------
-# Ragged slot-pool decode == per-sequence sequential decode.
+# Ragged slot-pool mechanics.  (Per-family ragged-vs-lockstep parity lives
+# in test_family_parity.py — one token-equality matrix over the whole zoo.)
 # ---------------------------------------------------------------------------
-def _sequential_logits(m, params, toks, plens, n_steps):
-    """Per-sequence scalar decode (the lockstep path), full-length caches."""
-    cfg = m.cfg
-    out = {}
-    caches = []
-    for i in range(len(plens)):
-        _, c = engine.prefill(params, toks[i:i + 1, :plens[i]], cfg=cfg,
-                              max_len=32)
-        caches.append(c)
-    step = jax.jit(functools.partial(engine.decode_step, cfg=cfg))
-    for t in range(n_steps):
-        for i in range(len(plens)):
-            lg, caches[i] = step(params, caches[i],
-                                 toks[i:i + 1, plens[i] + t],
-                                 jnp.int32(plens[i] + t))
-            out[(i, t)] = np.asarray(lg[0, :cfg.vocab])
-    return out
-
-
 def _ragged_pool(m, params, toks, plens):
     cfg = m.cfg
     pool = kv_cache.init_slot_pool(cfg, len(plens), 32)
@@ -132,36 +115,6 @@ def _ragged_pool(m, params, toks, plens):
                               max_len=32)
         pool = kv_cache.adopt_slot(pool, c, i, plens[i])
     return pool
-
-
-@pytest.mark.parametrize("arch", [
-    "qwen2.5-14b",                               # dense GQA, grouped
-    "rwkv6-1.6b",                                # recurrent state (no pos)
-    pytest.param("h2o-danube-3-4b", marks=pytest.mark.slow),   # SWA mask
-    pytest.param("deepseek-v2-lite-16b",
-                 marks=pytest.mark.slow),        # MLA latent cache
-    pytest.param("hymba-1.5b", marks=pytest.mark.slow),        # hybrid
-])
-def test_ragged_decode_matches_sequential(arch):
-    """Batched decode with per-slot lengths must match per-sequence
-    sequential decode (atol like test_ring_decode_matches_full_window)."""
-    m = build_model(arch, reduced=True)
-    cfg = m.cfg
-    params = m.init(KEY)
-    plens = [3, 5, 7]
-    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0, cfg.vocab)
-    n_steps = 5
-    want = _sequential_logits(m, params, toks, plens, n_steps)
-
-    pool = _ragged_pool(m, params, toks, plens)
-    rstep = jax.jit(functools.partial(engine.decode_step_ragged, cfg=cfg))
-    for t in range(n_steps):
-        tok = jnp.array([toks[i, plens[i] + t] for i in range(3)], jnp.int32)
-        lg, pool = rstep(params, pool, tok)
-        for i in range(3):
-            np.testing.assert_allclose(
-                np.asarray(lg[i, :cfg.vocab]), want[(i, t)], atol=2e-3,
-                err_msg=f"{arch}: slot {i} step {t}")
 
 
 def test_ragged_evict_refill_mid_run():
@@ -261,10 +214,31 @@ class TestScheduler:
         with pytest.raises(ValueError, match="exceeds max_len"):
             eng.run([Request(rid=0, prompt=(1, 2, 3, 4), max_new_tokens=8)])
 
-    def test_encdec_unsupported(self):
+    def test_encdec_serves_through_engine(self):
+        """encdec joins the pool like any family: frames are REQUIRED per
+        request, the cross-KV pages in the same arena as self-KV, and the
+        strip pool (no page tables to hold a cross row) stays rejected.
+        Token parity vs lockstep lives in test_family_parity.py."""
         m = build_model("whisper-base", reduced=True)
-        with pytest.raises(NotImplementedError):
-            ContinuousBatchingEngine(m, {}, slots=1, max_len=8)
+        params = m.init(KEY)
+        with pytest.raises(ValueError, match="paged"):
+            ContinuousBatchingEngine(m, params, slots=1, max_len=16,
+                                     paged=False)
+        eng = ContinuousBatchingEngine(m, params, slots=2, max_len=32,
+                                       temperature=0.0, seed=1,
+                                       max_cross_len=8)
+        with pytest.raises(ValueError, match="frames"):
+            eng.run([Request(rid=0, prompt=(1, 2, 3), max_new_tokens=2)])
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=(1, 2, 3 + i), max_new_tokens=3,
+                        frames=rng.standard_normal(
+                            (6, m.cfg.d_model)).astype(np.float32))
+                for i in range(3)]
+        comps = eng.run(reqs)
+        assert [c.rid for c in comps] == [0, 1, 2]
+        assert all(len(c.tokens) == 3 for c in comps)
+        # cross pages freed with the slot: nothing leaks at quiescence
+        assert eng.allocator.free_pages == eng.allocator.usable_pages
 
 
 # ---------------------------------------------------------------------------

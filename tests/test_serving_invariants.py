@@ -1,0 +1,231 @@
+"""Property-based serving invariants: random action sequences against the
+page allocator and the continuous-batching scheduler, with the bookkeeping
+identities checked after EVERY step — not just at the end of a scripted
+scenario like the unit tests do.
+
+Tier 1 (pure host, no jit): a mirror-model random walk over
+``PageAllocator`` — alloc/share/free in random interleavings, with an
+independent refcount model cross-checked after each action.  220 seeded
+sequences run in fast CI in well under a second, plus a hypothesis-driven
+variant (the real package when installed, tests/_hypothesis_fallback
+otherwise).
+
+Tier 2 (jit, small models): engines driven through random
+admit / decode-burst / preempt / demote / promote / evict interleavings by
+seeded walks, asserting after every scheduler step that
+
+  * every arena page is either on the free list or referenced, and its
+    refcount equals EXACTLY the number of host-side readers (slot tables,
+    cross tables, the prefix index) — no leaks, no phantom references,
+  * referenced pages have refcount >= 1 (use-after-free guard),
+  * at quiescence the pool drains: free + prefix-indexed == usable, and
+    the swap tier's ``demoted == prefetched``.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare jax+pytest env
+    from _hypothesis_fallback import given, settings, st
+
+from repro.models import build_model
+from repro.serving.kv_cache import PageAllocator
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+N_PAGES = 24
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: allocator vs an independent refcount mirror (pure host).
+# ---------------------------------------------------------------------------
+def _allocator_walk(seed: int, n_actions: int = 60) -> None:
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(N_PAGES)
+    rc: dict[int, int] = {}              # mirror: page -> expected refcount
+    held: list[int] = []                 # outstanding references (multiset)
+
+    for _ in range(n_actions):
+        op = int(rng.integers(0, 3))
+        if op == 0:                                      # alloc
+            k = int(rng.integers(1, 7))
+            got = alloc.alloc(k)
+            if k > alloc.usable_pages - len(rc):
+                assert got is None       # all-or-nothing: nothing leaked
+            else:
+                assert got is not None and len(got) == len(set(got)) == k
+                for p in got:
+                    assert 0 < p < N_PAGES               # never the trash page
+                    assert p not in rc                   # never a live page
+                    rc[p] = 1
+                held.extend(got)
+        elif op == 1 and rc:                             # share live pages
+            pick = [int(p) for p in
+                    rng.choice(sorted(rc), size=int(rng.integers(1, 4)))]
+            alloc.share(pick)
+            for p in pick:
+                rc[p] += 1
+            held.extend(pick)
+        elif op == 2 and held:                           # drop references
+            rng.shuffle(held)
+            k = int(rng.integers(1, 4))
+            drop, held = held[:k], held[k:]
+            alloc.free(drop)
+            for p in drop:
+                rc[p] -= 1
+                if rc[p] == 0:
+                    del rc[p]
+        # the identities, after every single action:
+        assert alloc.free_pages == alloc.usable_pages - len(rc)
+        for p in range(1, N_PAGES):
+            assert alloc.refcount(p) == rc.get(p, 0)
+        assert all(n >= 1 for n in rc.values())
+
+    alloc.free(held)                     # full unwind drains the pool
+    assert alloc.free_pages == alloc.usable_pages
+
+
+def test_allocator_mirror_bulk():
+    """220 seeded sequences x 60 actions: the fast-CI volume floor."""
+    for seed in range(220):
+        _allocator_walk(seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=5, max_value=160))
+def test_allocator_mirror_property(seed, n_actions):
+    _allocator_walk(seed, n_actions)
+
+
+def test_misuse_asserts():
+    """The two bug classes refcounting exists to catch must ASSERT, not
+    silently corrupt: free past zero, and sharing a free page."""
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    a.free([p])
+    with pytest.raises(AssertionError, match="double free"):
+        a.free([p])
+    with pytest.raises(AssertionError, match="share of free"):
+        a.share([p])
+    assert a.free_pages == a.usable_pages
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: scheduler walks (random admit/burst/preempt/demote/promote/evict).
+# ---------------------------------------------------------------------------
+def _prefix_pages(pc) -> list[int]:
+    """Every page the radix index references (one node = one reference)."""
+    out, stack = [], list(pc.root.children.values())
+    while stack:
+        node = stack.pop()
+        out.append(node.page)
+        stack.extend(node.children.values())
+    return out
+
+
+def _check_invariants(eng) -> None:
+    alloc = eng.allocator
+    held: dict[int, int] = {}
+    for row in list(eng.slot_pages) + list(eng.slot_cross_pages):
+        for p in row:
+            held[p] = held.get(p, 0) + 1
+    if eng.prefix_cache is not None:
+        pages = _prefix_pages(eng.prefix_cache)
+        assert len(pages) == eng.prefix_cache.n_pages
+        for p in pages:
+            held[p] = held.get(p, 0) + 1
+    # exact refcount identity: no leaked pages, no phantom readers
+    for p in range(1, alloc.n_pages):
+        assert alloc.refcount(p) == held.get(p, 0), f"page {p}"
+    assert alloc.free_pages == alloc.usable_pages - len(held)
+
+
+def _engine_walk(eng, seed, n_requests, rid0, *, frames_dim=None,
+                 plen_lo=2, plen_hi=10, max_new_lo=1, max_new_hi=6):
+    """Random open-loop traffic against a live engine: submissions
+    interleave with decode bursts, and the allocator identities must hold
+    at every host-quiescent point (between scheduler steps)."""
+    rng = np.random.default_rng(seed)
+    vocab = eng.cfg.vocab
+    rid, left, steps = rid0, n_requests, 0
+    while (left or eng.pending or eng.active_slots() or eng._swapped
+           or eng._encoding):
+        # saturate the slots before the first burst (concurrency is what
+        # creates page pressure), then trickle the rest randomly
+        n_sub = (min(left, eng.n_slots) if steps == 0
+                 else int(min(left, rng.integers(0, 2))))
+        for _ in range(n_sub):
+            plen = int(rng.integers(plen_lo, plen_hi))
+            eng.submit(Request(
+                rid=rid, prompt=tuple(int(t)
+                                      for t in rng.integers(0, vocab, plen)),
+                max_new_tokens=int(rng.integers(max_new_lo, max_new_hi)),
+                frames=(rng.standard_normal((6, frames_dim))
+                        .astype(np.float32)
+                        if frames_dim is not None else None)))
+            rid, left = rid + 1, left - 1
+        eng.step()
+        _check_invariants(eng)
+        steps += 1
+        assert steps < 600, "walk failed to converge"
+    return rid
+
+
+def test_dense_engine_walk():
+    """Tight pool (10 usable pages of 8 over 3 slots): walks hit growth
+    OOM, preemption, and prefix-index eviction; one engine serves every
+    walk so later walks start with a warm (partially indexed) pool."""
+    m = build_model("qwen2.5-14b", reduced=True)
+    params = m.init(__import__("jax").random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(m, params, slots=3, max_len=32,
+                                   page_size=8, pages=11, temperature=0.0,
+                                   seed=4)
+    rid = 0
+    for seed in range(6):
+        rid = _engine_walk(eng, seed, n_requests=6, rid0=rid)
+        # quiescence: everything back except what the prefix index retains
+        assert (eng.allocator.free_pages + eng.prefix_cache.n_pages
+                == eng.allocator.usable_pages)
+    assert eng.stats["admitted"] >= 36   # nothing dropped across walks
+
+
+def test_swap_engine_walk():
+    """Overloaded arena with the host-RAM tier on: walks must demote AND
+    promote, and the swap tier balances at quiescence."""
+    m = build_model("qwen2.5-14b", reduced=True)
+    params = m.init(__import__("jax").random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(m, params, slots=3, max_len=128,
+                                   page_size=16, pages=10, temperature=0.0,
+                                   seed=4, prefix_cache=False,
+                                   host_swap_bytes=1 << 30)
+    rid = 0
+    for seed in range(3):
+        # prompts fill 3 pages of 16; every decode budget crosses into a
+        # 4th, so three co-resident slots want 12 of the 9 usable pages —
+        # growth pressure hits _ensure_pages, which demotes the victim
+        rid = _engine_walk(eng, seed, n_requests=5, rid0=rid,
+                           plen_lo=44, plen_hi=49, max_new_lo=10,
+                           max_new_hi=17)
+        assert eng.stats["demoted"] == eng.stats["prefetched"]
+        assert eng.allocator.free_pages == eng.allocator.usable_pages
+    assert eng.stats["demoted"] > 0      # the overload actually swapped
+
+
+def test_encdec_engine_walk():
+    """encdec walks: cross pages are allocated at admission and must obey
+    the same identities as self pages at every step (the cross table is
+    just another reader), draining fully at quiescence."""
+    m = build_model("whisper-base", reduced=True)
+    params = m.init(__import__("jax").random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(m, params, slots=2, max_len=32,
+                                   page_size=8, pages=8, temperature=0.0,
+                                   seed=4, max_cross_len=8, enc_chunk=3)
+    rid = 0
+    for seed in range(3):
+        rid = _engine_walk(eng, seed, n_requests=4, rid0=rid,
+                           frames_dim=m.cfg.d_model, plen_hi=8,
+                           max_new_hi=5)
+        assert eng.allocator.free_pages == eng.allocator.usable_pages
+    assert eng.stats["admitted"] > 0
